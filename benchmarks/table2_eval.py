@@ -1,0 +1,67 @@
+"""Paper Table II: time per evaluation round.
+
+ScaleGNN evaluates with a single distributed full-graph 3D-PMM forward
+pass (no sampling). The baseline systems evaluate through their sampling
+pipelines — represented here by neighbor-sampled evaluation over all test
+vertices in mini-batches (SALIENT++/DistDGL style).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import csv, time_fn
+from repro.core import baselines as BL
+from repro.core import fourd, gcn_model as M
+from repro.graphs import build_partitioned_graph, make_synthetic_dataset
+from repro.optim import AdamW
+
+
+def main():
+    ds = make_synthetic_dataset(n=4096, num_classes=8, d_in=64,
+                                avg_degree=16, seed=0)
+    pg = build_partitioned_graph(ds, g=2)
+    cfg = M.GCNConfig(d_in=64, d_hidden=128, num_layers=3, num_classes=8)
+    mesh = fourd.make_mesh_4d(1, 2)
+    plan = fourd.build_plan(pg, cfg, mesh, batch=512)
+    params = plan.shard_params(M.init_params(jax.random.PRNGKey(0), cfg))
+    graph = plan.shard_graph(pg)
+    eval_step = fourd.make_eval_step(plan)
+
+    us_full = time_fn(lambda: eval_step(params, graph), warmup=2, iters=8)
+    csv("table2_scalegnn_fullgraph_eval", us_full, "distributed 3D PMM")
+
+    # sampled evaluation (baseline style): SAGE fan-out over test vertices
+    A = ds.adj_norm
+    rp, ci = jnp.array(A.indptr), jnp.array(A.indices)
+    feats, labels = jnp.array(ds.features), jnp.array(ds.labels)
+    ref_params = M.init_params(jax.random.PRNGKey(0), cfg)
+    cfg2 = M.GCNConfig(d_in=64, d_hidden=128, num_layers=2, num_classes=8)
+    ref_params2 = M.init_params(jax.random.PRNGKey(0), cfg2)
+    n_test = int(ds.test_mask.sum())
+    B = 256
+    n_batches = -(-n_test // B)
+
+    @jax.jit
+    def sampled_eval_round(key):
+        accs = []
+        for i in range(n_batches):
+            sgb = BL.sage_sample(jax.random.fold_in(key, i), rp, ci,
+                                 feats, labels, 4096, B, [10, 10])
+            lg = M.sage_forward(ref_params2, sgb, cfg2, train=False)
+            accs.append(M.accuracy(lg, sgb.labels))
+        return jnp.stack(accs).mean()
+
+    us_sampled = time_fn(sampled_eval_round, jax.random.PRNGKey(0),
+                         warmup=1, iters=4)
+    csv("table2_sampled_eval_baseline", us_sampled,
+        f"{n_batches} neighbor-sampled batches")
+    print(f"# full-graph/sampled eval ratio on the host mesh: "
+          f"{us_sampled / us_full:.2f}x. The paper's 36-111x GPU speedups "
+          f"come from the baselines' remote feature fetching + CPU "
+          f"fallback, which a single-host mesh cannot exhibit; the "
+          f"structural point (ONE distributed forward, no sampling) holds.")
+
+
+if __name__ == "__main__":
+    main()

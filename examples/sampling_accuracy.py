@@ -1,0 +1,13 @@
+"""Paper Table I reproduction at example scale: uniform vertex sampling vs
+GraphSAINT-node vs GraphSAGE, identical model/budget.
+
+    PYTHONPATH=src:. python examples/sampling_accuracy.py
+"""
+import sys
+import os
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+from benchmarks.table1_sampling_accuracy import main   # noqa: E402
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,65 @@
+"""Batched serving example: prefill a batch of prompts, then decode tokens
+with the per-family KV cache / SSM state machinery — the same code paths
+the decode_32k / long_500k dry-run shapes exercise.
+
+    PYTHONPATH=src python examples/serve_llm.py --arch mixtral-8x7b
+"""
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import ARCH_IDS, get_smoke
+from repro.models import transformer as T
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="mixtral-8x7b", choices=ARCH_IDS)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=64)
+    ap.add_argument("--new-tokens", type=int, default=32)
+    args = ap.parse_args()
+
+    cfg = get_smoke(args.arch)
+    rng = np.random.default_rng(0)
+    params = T.init_params(jax.random.PRNGKey(0), cfg)
+    B, S = args.batch, args.prompt_len
+    prompts = jnp.asarray(rng.integers(0, cfg.vocab, (B, S)), jnp.int32)
+    mem = None
+    if cfg.family == "vlm":
+        mem = jnp.asarray(rng.normal(size=(B, cfg.n_image_tokens,
+                                           cfg.d_model)), cfg.compute_dtype)
+    if cfg.family == "audio":
+        mem = jnp.asarray(rng.normal(size=(B, cfg.encoder.n_frames,
+                                           cfg.d_model)), cfg.compute_dtype)
+
+    prefill = jax.jit(lambda p, t, m: T.prefill(
+        p, t, cfg, max_len=S + args.new_tokens, memory=m))
+    decode = jax.jit(lambda p, t, c: T.decode_step(p, t, c, cfg))
+
+    t0 = time.time()
+    logits, cache = prefill(params, prompts, mem)
+    jax.block_until_ready(logits)
+    t_prefill = time.time() - t0
+    print(f"{cfg.name}: prefill {B}x{S} in {t_prefill*1e3:.1f} ms")
+
+    tok = jnp.argmax(logits[:, -1], axis=-1)[:, None].astype(jnp.int32)
+    outs = [tok]
+    t0 = time.time()
+    for _ in range(args.new_tokens - 1):
+        logits, cache = decode(params, tok, cache)
+        tok = jnp.argmax(logits[:, -1], axis=-1)[:, None].astype(jnp.int32)
+        outs.append(tok)
+    jax.block_until_ready(tok)
+    dt = time.time() - t0
+    gen = np.concatenate([np.array(o) for o in outs], axis=1)
+    print(f"decoded {args.new_tokens} tokens/seq in {dt*1e3:.1f} ms "
+          f"({B * args.new_tokens / dt:.0f} tok/s batch throughput)")
+    print("sample token ids:", gen[0][:16].tolist())
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,75 @@
+"""Train a reduced assigned-architecture config on the synthetic token
+stream — exercises the transformer substrate end-to-end (data pipeline,
+AdamW, checkpointing) on one device.
+
+    PYTHONPATH=src python examples/train_transformer.py --arch tinyllama-1.1b
+"""
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint import save_checkpoint
+from repro.configs import ARCH_IDS, get_smoke
+from repro.data import TokenStream
+from repro.models import transformer as T
+from repro.optim import AdamW, linear_warmup_cosine
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="tinyllama-1.1b", choices=ARCH_IDS)
+    ap.add_argument("--steps", type=int, default=150)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--ckpt-dir", default=None)
+    args = ap.parse_args()
+
+    cfg = get_smoke(args.arch)
+    if cfg.family in ("vlm", "audio"):
+        raise SystemExit(f"{args.arch}: LM pretraining example targets "
+                         "decoder-only families; the multimodal stubs are "
+                         "exercised by the dry-run and smoke tests")
+    print(f"training {cfg.name} ({cfg.family}) on synthetic tokens")
+    params = T.init_params(jax.random.PRNGKey(0), cfg)
+    n_params = sum(x.size for x in jax.tree.leaves(params))
+    print(f"parameters: {n_params:,}")
+
+    stream = TokenStream(vocab_size=cfg.vocab, batch=args.batch,
+                         seq_len=args.seq, seed=0, coherence=0.8)
+    opt = AdamW(lr=linear_warmup_cosine(3e-3, 10, args.steps),
+                grad_clip=1.0)
+    opt_state = opt.init(params)
+
+    @jax.jit
+    def train_step(p, o, toks, tgts):
+        def loss_fn(pp):
+            logits, aux = T.forward_train(pp, toks, cfg)
+            return T.lm_loss(logits, tgts, cfg.vocab) \
+                + 0.01 * jnp.asarray(aux, jnp.float32)
+        loss, grads = jax.value_and_grad(loss_fn)(p)
+        p2, o2 = opt.update(p, grads, o)
+        return p2, o2, loss
+
+    t0 = time.time()
+    first = None
+    for step in range(args.steps):
+        toks, tgts = stream.batch_at(step)
+        params, opt_state, loss = train_step(
+            params, opt_state, jnp.asarray(toks), jnp.asarray(tgts))
+        if first is None:
+            first = float(loss)
+        if step % 25 == 0:
+            print(f"step {step:4d}  loss {float(loss):.4f}  "
+                  f"t={time.time()-t0:.1f}s")
+    print(f"loss: {first:.3f} -> {float(loss):.3f} "
+          f"(planted bigram structure is learnable)")
+    assert float(loss) < first, "no learning happened"
+    if args.ckpt_dir:
+        print("saved:", save_checkpoint(args.ckpt_dir, args.steps,
+                                        jax.device_get(params)))
+
+
+if __name__ == "__main__":
+    main()

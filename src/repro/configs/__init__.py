@@ -1,0 +1,60 @@
+"""Assigned-architecture registry (``--arch <id>``) + input shapes.
+
+Each module exposes ``config()`` (the exact published numbers, cited in the
+module docstring) and ``smoke()`` (a reduced same-family variant: <= 2
+layers, d_model <= 512, <= 4 experts — run on CPU by the smoke tests).
+"""
+from __future__ import annotations
+
+import dataclasses
+import importlib
+from typing import Dict
+
+from repro.models.config import ModelConfig
+
+ARCH_IDS = (
+    "whisper-base",
+    "qwen2-0.5b",
+    "llama4-scout-17b-a16e",
+    "llama-3.2-vision-90b",
+    "mixtral-8x7b",
+    "command-r-plus-104b",
+    "zamba2-2.7b",
+    "tinyllama-1.1b",
+    "internlm2-1.8b",
+    "mamba2-780m",
+)
+
+_MODULES = {a: "repro.configs." + a.replace("-", "_").replace(".", "_")
+            for a in ARCH_IDS}
+
+
+@dataclasses.dataclass(frozen=True)
+class InputShape:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str           # "train" | "prefill" | "decode"
+
+
+INPUT_SHAPES: Dict[str, InputShape] = {
+    "train_4k": InputShape("train_4k", 4_096, 256, "train"),
+    "prefill_32k": InputShape("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": InputShape("decode_32k", 32_768, 128, "decode"),
+    "long_500k": InputShape("long_500k", 524_288, 1, "decode"),
+}
+
+
+def get_config(arch: str) -> ModelConfig:
+    return importlib.import_module(_MODULES[arch]).config()
+
+
+def get_smoke(arch: str) -> ModelConfig:
+    return importlib.import_module(_MODULES[arch]).smoke()
+
+
+def shape_applicable(cfg: ModelConfig, shape: InputShape) -> bool:
+    """long_500k only for sub-quadratic decode state (DESIGN.md §6)."""
+    if shape.name == "long_500k":
+        return cfg.supports_long_decode
+    return True

@@ -1,0 +1,150 @@
+"""Baseline sampling algorithms the paper compares against (Table I, Fig. 6).
+
+* GraphSAINT node sampler (Zeng et al. 2019) — degree-proportional node
+  sampling with the standard independent-inclusion normalization of the
+  aggregator and the loss.
+* GraphSAGE neighbor sampler (Hamilton et al. 2017) — node-wise fan-out
+  sampling with mean aggregation; the sampler used by DistDGL / MassiveGNN /
+  SALIENT++.
+
+Both are implemented as jit-able, static-shape JAX functions over the same
+padded-CSR graph representation as the paper's sampler, so the Table I /
+Fig. 6 comparisons isolate the *sampling algorithm* (identical model,
+optimizer, hardware). DESIGN.md §9.5 records that the baseline *systems*
+are represented by their algorithms, not their codebases.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.sampling import extract_dense_block
+
+
+# ---------------------------------------------------------------------------
+# GraphSAINT node sampler
+# ---------------------------------------------------------------------------
+
+class SaintBatch(NamedTuple):
+    adj: jax.Array         # (B, B) dense normalized induced adjacency
+    feats: jax.Array       # (B, d_in)
+    labels: jax.Array      # (B,)
+    loss_weights: jax.Array  # (B,) 1/(B * p_v) loss normalization
+    vertex_ids: jax.Array
+
+
+def saint_node_sample(
+    key: jax.Array,
+    rp: jax.Array, ci: jax.Array, val: jax.Array,
+    features: jax.Array, labels: jax.Array,
+    degrees: jax.Array,       # (N,) float32 degree (sampling distribution)
+    n: int, batch: int, e_cap: int,
+) -> SaintBatch:
+    """GraphSAINT-node: sample B vertices with p_v ∝ deg(v) (without
+    replacement via Gumbel top-k), build the induced subgraph, and normalize:
+
+      aggregator: a_uv / q_uv with q_uv = 1 - (1-p̃_u)(1-p̃_v) ≈ p̃_u + p̃_v,
+                  p̃_v = min(1, B * p_v)  (independent-inclusion estimate)
+      loss:       weight 1/(B * p_v) per sampled vertex.
+    """
+    logp = jnp.log(jnp.maximum(degrees, 1e-9))
+    gumbel = -jnp.log(-jnp.log(
+        jax.random.uniform(key, (n,), minval=1e-9, maxval=1.0)))
+    s = jnp.sort(jax.lax.top_k(logp + gumbel, batch)[1])
+
+    p_v = degrees / jnp.maximum(degrees.sum(), 1e-9)
+    p_incl = jnp.minimum(1.0, batch * p_v)                    # (N,)
+
+    adj = extract_dense_block(rp, ci, val, s, s, e_cap,
+                              rescale_offdiag=1.0, is_diag_block=True)
+    pu = p_incl[s]                                            # (B,)
+    q = jnp.clip(pu[:, None] + pu[None, :] - pu[:, None] * pu[None, :],
+                 1e-9, 1.0)
+    eye = jnp.eye(batch, dtype=adj.dtype)
+    adj = adj * ((1.0 - eye) / q + eye)                       # keep self-loops
+
+    w = 1.0 / jnp.maximum(batch * p_v[s], 1e-9)
+    w = w / jnp.maximum(w.sum(), 1e-9) * batch                # normalize mean
+    return SaintBatch(adj=adj, feats=features[s], labels=labels[s],
+                      loss_weights=w, vertex_ids=s)
+
+
+# ---------------------------------------------------------------------------
+# GraphSAGE neighbor sampler
+# ---------------------------------------------------------------------------
+
+class SageBatch(NamedTuple):
+    """Layered neighbor-sampled batch for an L-layer SAGE network.
+
+    ``frontiers[l]`` are the global vertex ids needed at layer input l
+    (frontiers[0] is the innermost = target batch). Each frontier *contains
+    its inner frontier as a prefix* (self vertices), so previous-layer self
+    embeddings are always available: ``frontiers[l+1] = concat(frontiers[l],
+    sampled_neighbors_of_frontiers[l])``. ``neighbors[l]`` maps each
+    frontier-l vertex to ``fanout_l`` sampled neighbor *positions within
+    frontier l+1* (already offset past the self prefix).
+    """
+
+    frontiers: Tuple[jax.Array, ...]     # sizes B, B*(1+k1), ...
+    neighbors: Tuple[jax.Array, ...]     # [(B, k1), (B*(1+k1), k2), ...]
+    feats: jax.Array                     # features of outermost frontier
+    labels: jax.Array                    # labels of target batch
+
+
+def _sample_row_neighbors(key, rp, ci, row, fanout, n_local):
+    """Sample `fanout` neighbors of `row` with replacement (self if isolated)."""
+    deg = rp[row + 1] - rp[row]
+    r = jax.random.randint(key, (fanout,), 0, jnp.maximum(deg, 1))
+    nbr = ci[rp[row] + jnp.where(deg > 0, r, 0)]
+    return jnp.where(deg > 0, nbr, row)
+
+
+def sage_sample(
+    key: jax.Array,
+    rp: jax.Array, ci: jax.Array,
+    features: jax.Array, labels: jax.Array,
+    n: int, batch: int, fanouts: Sequence[int],
+) -> SageBatch:
+    """Node-wise neighbor sampling with fan-outs ``fanouts`` (innermost
+    first), exhibiting the paper's 'neighborhood explosion': the outermost
+    frontier has B * prod(fanouts) vertices."""
+    key, sk = jax.random.split(key)
+    targets = jnp.sort(jax.random.permutation(sk, n)[:batch])
+
+    frontiers = [targets]
+    neighbor_maps = []
+    cur = targets
+    for li, k in enumerate(fanouts):
+        key, sk = jax.random.split(key)
+        keys = jax.random.split(sk, cur.shape[0])
+        nbrs = jax.vmap(
+            lambda kk, row: _sample_row_neighbors(kk, rp, ci, row, k, n)
+        )(keys, cur)                                   # (|cur|, k) global ids
+        flat = nbrs.reshape(-1)
+        # next frontier = self prefix + sampled neighbors; neighbor positions
+        # are offset past the prefix (duplicates fine for mean aggregation)
+        offset = cur.shape[0]
+        neighbor_maps.append(
+            offset + jnp.arange(flat.shape[0], dtype=jnp.int32)
+            .reshape(nbrs.shape))
+        nxt = jnp.concatenate([cur, flat])
+        frontiers.append(nxt)
+        cur = nxt
+    return SageBatch(
+        frontiers=tuple(frontiers),
+        neighbors=tuple(neighbor_maps),
+        feats=features[frontiers[-1]],
+        labels=labels[targets],
+    )
+
+
+def sage_aggregate(h_next: jax.Array, neighbor_map: jax.Array) -> jax.Array:
+    """GCN-style mean over {self} ∪ sampled neighbors:
+    (|F_{l+1}|, d) -> (|F_l|, d). The self embedding is the prefix of
+    ``h_next`` (see SageBatch invariant)."""
+    n_inner, k = neighbor_map.shape
+    h_self = h_next[:n_inner]                        # (|F_l|, d)
+    nbr_mean = h_next[neighbor_map].mean(axis=1)     # (|F_l|, d)
+    return (h_self + k * nbr_mean) / (k + 1.0)

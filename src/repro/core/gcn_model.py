@@ -1,0 +1,171 @@
+"""The paper's GNN model (§III): GCN with input projection, L layers of
+[SpMM -> GEMM -> RMSNorm -> ReLU -> Dropout -> Residual], output head.
+
+This module is the *single-device reference* implementation — dense
+mini-batch adjacency, pure jnp — used by the accuracy experiments (Table I,
+Fig. 6) and as the oracle for the distributed 3D-PMM version in
+``repro/core/fourd.py`` (which must produce bit-comparable results up to
+collective reduction order).
+
+Every architectural component can be toggled (paper §III-A: "Each component
+can be enabled or disabled without changing the parallelization strategy").
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class GCNConfig:
+    d_in: int
+    d_hidden: int
+    num_layers: int
+    num_classes: int
+    dropout: float = 0.3
+    use_rmsnorm: bool = True
+    use_residual: bool = True
+    use_relu: bool = True
+    rms_eps: float = 1e-6
+    # kernel selection: "jnp" (reference), "pallas" (fused element-wise tail)
+    elementwise_impl: str = "jnp"
+    spmm_impl: str = "dense"      # "dense" | "ell" (block-ELL Pallas kernel)
+
+
+Params = Dict[str, Any]
+
+
+def init_params(key: jax.Array, cfg: GCNConfig) -> Params:
+    """Glorot-initialized parameters for the §III model."""
+    k_in, k_out, *k_layers = jax.random.split(key, cfg.num_layers + 2)
+
+    def glorot(k, fan_in, fan_out):
+        scale = jnp.sqrt(2.0 / (fan_in + fan_out))
+        return scale * jax.random.normal(k, (fan_in, fan_out), jnp.float32)
+
+    layers = []
+    for kl in k_layers:
+        layers.append({
+            "w": glorot(kl, cfg.d_hidden, cfg.d_hidden),          # Eq. 6
+            "rms_scale": jnp.ones((cfg.d_hidden,), jnp.float32),  # Eq. 7
+        })
+    return {
+        "w_in": glorot(k_in, cfg.d_in, cfg.d_hidden),             # Eq. 4
+        "w_out": glorot(k_out, cfg.d_hidden, cfg.num_classes),    # Eq. 11
+        "layers": layers,
+    }
+
+
+def rmsnorm(x: jax.Array, scale: jax.Array, eps: float = 1e-6) -> jax.Array:
+    """Eq. 7 — root-mean-square normalization over the feature dim."""
+    ms = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    return x * jax.lax.rsqrt(ms + eps) * scale
+
+
+def _elementwise_tail(x: jax.Array, residual: jax.Array, scale: jax.Array,
+                      cfg: GCNConfig, dropout_key: Optional[jax.Array],
+                      train: bool) -> jax.Array:
+    """RMSNorm -> ReLU -> Dropout -> Residual (Eqs. 7-10)."""
+    if cfg.elementwise_impl == "pallas":
+        from repro.kernels import ops as kops
+        mask = None
+        if train and cfg.dropout > 0 and dropout_key is not None:
+            mask = jax.random.bernoulli(
+                dropout_key, 1.0 - cfg.dropout, x.shape)
+        return kops.fused_layer_tail(
+            x, residual if cfg.use_residual else None, scale,
+            dropout_mask=mask, dropout_rate=cfg.dropout if mask is not None
+            else 0.0, eps=cfg.rms_eps, use_rmsnorm=cfg.use_rmsnorm,
+            use_relu=cfg.use_relu)
+
+    h = rmsnorm(x, scale, cfg.rms_eps) if cfg.use_rmsnorm else x
+    if cfg.use_relu:
+        h = jax.nn.relu(h)                                         # Eq. 8
+    if train and cfg.dropout > 0 and dropout_key is not None:
+        keep = jax.random.bernoulli(dropout_key, 1.0 - cfg.dropout, h.shape)
+        h = jnp.where(keep, h / (1.0 - cfg.dropout), 0.0)          # Eq. 9
+    if cfg.use_residual:
+        h = h + residual                                           # Eq. 10
+    return h
+
+
+def _spmm(adj, x, cfg: GCNConfig):
+    """Eq. 5 — neighborhood aggregation. ``adj`` is either a dense (B, B)
+    matrix or a block-ELL tuple for the Pallas kernel."""
+    if cfg.spmm_impl == "ell":
+        from repro.kernels import ops as kops
+        return kops.spmm_ell(*adj, x)
+    return adj @ x
+
+
+def forward(params: Params, adj, x: jax.Array, cfg: GCNConfig, *,
+            dropout_key: Optional[jax.Array] = None,
+            train: bool = True) -> jax.Array:
+    """Forward pass §III-B. Returns logits (B, num_classes)."""
+    h = x @ params["w_in"]                                         # Eq. 4
+    keys = (jax.random.split(dropout_key, cfg.num_layers)
+            if dropout_key is not None else [None] * cfg.num_layers)
+    for layer, dk in zip(params["layers"], keys):
+        agg = _spmm(adj, h, cfg)                                   # Eq. 5
+        conv = agg @ layer["w"]                                    # Eq. 6
+        h = _elementwise_tail(conv, h, layer["rms_scale"], cfg, dk, train)
+    return h @ params["w_out"]                                     # Eq. 11
+
+
+def cross_entropy_loss(logits: jax.Array, labels: jax.Array,
+                       weights: Optional[jax.Array] = None) -> jax.Array:
+    """Masked (label == -1 ignored) mean cross-entropy, Eq. 12."""
+    valid = labels >= 0
+    safe = jnp.where(valid, labels, 0)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    nll = logz - jnp.take_along_axis(
+        logits, safe[:, None], axis=-1)[:, 0]
+    w = valid.astype(logits.dtype)
+    if weights is not None:
+        w = w * weights
+    return jnp.sum(nll * w) / jnp.maximum(jnp.sum(w), 1.0)
+
+
+def accuracy(logits: jax.Array, labels: jax.Array,
+             mask: Optional[jax.Array] = None) -> jax.Array:
+    valid = labels >= 0
+    if mask is not None:
+        valid = valid & mask
+    correct = (jnp.argmax(logits, axis=-1) == labels) & valid
+    return jnp.sum(correct) / jnp.maximum(jnp.sum(valid), 1)
+
+
+# ---------------------------------------------------------------------------
+# GraphSAGE variant of the same network (baseline model for Table I / Fig. 6)
+# ---------------------------------------------------------------------------
+
+def sage_forward(params: Params, batch, cfg: GCNConfig, *,
+                 dropout_key: Optional[jax.Array] = None,
+                 train: bool = True) -> jax.Array:
+    """SAGE-style forward: mean aggregation over sampled neighbor fan-outs.
+
+    Uses the same parameters/architecture as `forward`, but aggregation at
+    layer l is a mean over the sampled neighbors (baselines.sage_aggregate)
+    instead of the rescaled induced-subgraph SpMM. Layer count must equal
+    ``len(batch.neighbors)``.
+    """
+    from repro.core import baselines as bl
+    assert cfg.num_layers == len(batch.neighbors)
+    # previous-layer embeddings for the outermost frontier
+    h = batch.feats @ params["w_in"]
+    keys = (jax.random.split(dropout_key, cfg.num_layers)
+            if dropout_key is not None else [None] * cfg.num_layers)
+    # walk inward: layer li consumes frontier li+1 embeddings, producing
+    # embeddings for frontier li (self vertices = prefix of frontier li+1)
+    for li in reversed(range(cfg.num_layers)):
+        layer = params["layers"][li]
+        n_inner = batch.frontiers[li].shape[0]
+        h_self = h[:n_inner]                     # prev-layer self embeddings
+        agg = bl.sage_aggregate(h, batch.neighbors[li])
+        conv = agg @ layer["w"]
+        h = _elementwise_tail(conv, h_self, layer["rms_scale"], cfg,
+                              keys[li], train)
+    return h @ params["w_out"]

@@ -1,0 +1,240 @@
+"""3D Parallel Matrix Multiplication with layer rotation (ScaleGNN §IV-C).
+
+We adapt Agarwal et al.'s 3D PMM to the mixed sparse-dense computation of
+GCN layers, exactly as the paper does. Everything in this module is written
+to run *inside* ``shard_map`` over the mesh axes ``(x, y, z)`` (with the DP
+axis ``d`` wrapped around it by ``repro/core/fourd.py``).
+
+Layout algebra (DESIGN.md §4). A matrix "lives on plane (a, b)" when its
+rows are block-sharded over mesh axis ``a``, its columns over ``b``, and it
+is replicated over the remaining axis. One PMM step is::
+
+    C_partial = A_local @ B_local          # pure local compute
+    C = psum(C_partial, reduce_axis)       # one all-reduce
+
+Per GCN layer with input state on plane (r, c) replicated over p:
+
+    SpMM: adjacency block on (p, r)  ->  psum over r -> H on (p, c)
+    GEMM: weight block on (c, r)     ->  psum over c -> out on (p, r)
+
+so the layer output state is (p, r) replicated over c: the rotation
+``(r, c, p) -> (p, r, c)``, period 3 — the paper's "layer rotation"
+(§IV-C3), which needs three adjacency shardings and zero feature resharding
+between layers. The residual connection *does* need a reshard (paper §IV-C4);
+two implementations are provided (all-gather baseline, collective-permute
+optimized — a §Perf hillclimb in EXPERIMENTS.md).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.precision import psum_fp32, psum_maybe_bf16
+
+
+@dataclasses.dataclass(frozen=True)
+class PlaneState:
+    """Tracks the (row, col, rep) mesh-axis roles of the activation tensor."""
+
+    row: str
+    col: str
+    rep: str
+
+    def rotate(self) -> "PlaneState":
+        """Layer rotation: (r, c, p) -> (p, r, c)."""
+        return PlaneState(row=self.rep, col=self.row, rep=self.col)
+
+    @property
+    def adj_plane(self) -> Tuple[str, str]:
+        """The plane of the adjacency shard consumed at this state: (p, r)."""
+        return (self.rep, self.row)
+
+    @property
+    def weight_plane(self) -> Tuple[str, str]:
+        """The plane of the GEMM weight consumed at this state: (c, r)."""
+        return (self.col, self.row)
+
+
+def initial_state(axes: Sequence[str] = ("x", "y", "z")) -> PlaneState:
+    """State of the projected features F after the input projection
+    (Fig. 4 left): rows over x, cols over y, replicated over z."""
+    return PlaneState(row=axes[0], col=axes[1], rep=axes[2])
+
+
+def state_after_layers(num_layers: int,
+                       axes: Sequence[str] = ("x", "y", "z")) -> PlaneState:
+    st = initial_state(axes)
+    for _ in range(num_layers):
+        st = st.rotate()
+    return st
+
+
+# ---------------------------------------------------------------------------
+# PMM primitives (run inside shard_map)
+# ---------------------------------------------------------------------------
+
+def pmm_matmul(lhs: jax.Array, rhs: jax.Array, reduce_axis: str,
+               *, bf16: bool = False) -> jax.Array:
+    """One 3D-PMM step: local matmul + all-reduce over ``reduce_axis``.
+
+    Used for both the SpMM aggregation (Eq. 27; the adjacency block is dense
+    on TPU — DESIGN.md §3) and the GEMM update (Eq. 28)."""
+    return psum_maybe_bf16(lhs @ rhs, reduce_axis, bf16)
+
+
+def csr_spmm_local(rp: jax.Array, ci: jax.Array, val: jax.Array,
+                   h: jax.Array, n_rows: int) -> jax.Array:
+    """Local sparse A @ H on a padded-CSR shard (used by full-graph eval,
+    where densifying an (n_local, n_local) block would be wasteful).
+
+    Padded entries carry ``val == 0`` and sentinel column ``n_local`` —
+    the clipped gather contributes nothing.
+    """
+    e_pad = ci.shape[0]
+    # row id of every nnz slot: rows = searchsorted(rp[1:], slot, 'right')
+    rows = jnp.searchsorted(rp, jnp.arange(e_pad, dtype=jnp.int32),
+                            side="right") - 1
+    rows = jnp.clip(rows, 0, n_rows - 1)
+    cols = jnp.clip(ci, 0, h.shape[0] - 1)
+    contrib = val[:, None] * h[cols]                     # (e_pad, d)
+    return jax.ops.segment_sum(contrib, rows, num_segments=n_rows)
+
+
+def parallel_rmsnorm(x: jax.Array, scale: jax.Array, col_axis: str,
+                     d_model: int, eps: float = 1e-6) -> jax.Array:
+    """Eq. 29 — RMSNorm with the feature dim sharded over ``col_axis``.
+    The sum-of-squares all-reduce stays FP32 (paper §V-B)."""
+    sq = jnp.sum(jnp.square(x), axis=-1, keepdims=True)
+    ms = psum_fp32(sq, col_axis) / d_model
+    return x * jax.lax.rsqrt(ms + eps) * scale
+
+
+def parallel_cross_entropy(
+    logits: jax.Array,           # (b_local, c_local) on plane (row, class)
+    labels: jax.Array,           # (b_local,) global class ids, -1 = ignore
+    class_axis: str,             # mesh axis sharding the class dim
+    row_axis: str,               # mesh axis sharding the batch rows
+    n_classes: int,              # true (unpadded) class count
+) -> Tuple[jax.Array, jax.Array]:
+    """Distributed masked cross-entropy: logsumexp over the class-sharded
+    axis (FP32, paper §V-B), target-logit fetch via a masked psum.
+
+    Returns (sum_nll_over_all_rows, count) — both fully reduced and
+    replicated within the (x, y, z) group.
+    """
+    c_local = logits.shape[-1]
+    c0 = jax.lax.axis_index(class_axis) * c_local
+    # mask padded class columns out of the softmax
+    col_ids = c0 + jnp.arange(c_local)
+    logits = jnp.where(col_ids[None, :] < n_classes, logits, -1e30)
+
+    # target logit: each row's label lives on exactly one class shard
+    rel = labels - c0
+    in_range = (rel >= 0) & (rel < c_local) & (labels >= 0)
+    safe_rel = jnp.clip(rel, 0, c_local - 1)
+    tgt_local = jnp.take_along_axis(logits, safe_rel[:, None], axis=-1)[:, 0]
+    tgt = psum_fp32(jnp.where(in_range, tgt_local, 0.0), class_axis)
+
+    # distributed logsumexp (FP32); the max shift is gradient-neutral, so cut
+    # the tangent BEFORE pmax (which has no differentiation rule)
+    m = jax.lax.pmax(
+        jax.lax.stop_gradient(jnp.max(logits, axis=-1)), class_axis)
+    z = psum_fp32(jnp.sum(jnp.exp(logits - m[:, None]), axis=-1), class_axis)
+    logz = m + jnp.log(z)
+
+    w = (labels >= 0).astype(logits.dtype)
+    nll_sum = jnp.sum((logz - tgt) * w)
+    cnt = jnp.sum(w)
+    return psum_fp32(nll_sum, row_axis), psum_fp32(cnt, row_axis)
+
+
+def parallel_argmax_correct(
+    logits: jax.Array, labels: jax.Array, class_axis: str, row_axis: str,
+    n_classes: int,
+) -> Tuple[jax.Array, jax.Array]:
+    """Distributed accuracy numerator/denominator for evaluation."""
+    c_local = logits.shape[-1]
+    c0 = jax.lax.axis_index(class_axis) * c_local
+    col_ids = c0 + jnp.arange(c_local)
+    logits = jnp.where(col_ids[None, :] < n_classes, logits, -jnp.inf)
+    local_max = jnp.max(logits, axis=-1)
+    local_arg = c0 + jnp.argmax(logits, axis=-1)
+    gmax = jax.lax.pmax(local_max, class_axis)
+    # smallest class index attaining the max (deterministic tie-break)
+    cand = jnp.where(local_max >= gmax, local_arg, n_classes + 1)
+    garg = -jax.lax.pmax(-cand, class_axis)          # pmin via pmax
+    valid = labels >= 0
+    correct = jnp.sum((garg == labels) & valid)
+    total = jnp.sum(valid)
+    return (psum_fp32(correct.astype(jnp.float32), row_axis),
+            psum_fp32(total.astype(jnp.float32), row_axis))
+
+
+# ---------------------------------------------------------------------------
+# Residual resharding (paper §IV-C4)
+# ---------------------------------------------------------------------------
+
+def reshard_gather(t: jax.Array, from_state: PlaneState,
+                   to_plane: Tuple[str, str]) -> jax.Array:
+    """Baseline reshard: all-gather the full matrix over the source plane,
+    then slice this device's destination block. Simple and correct; moves
+    g^2x more bytes than necessary (see ``reshard_permute``)."""
+    full = jax.lax.all_gather(t, from_state.row, axis=0, tiled=True)
+    full = jax.lax.all_gather(full, from_state.col, axis=1, tiled=True)
+    br, bc = t.shape
+    # destination block sizes equal source block sizes (square grid)
+    i = jax.lax.axis_index(to_plane[0])
+    j = jax.lax.axis_index(to_plane[1])
+    return jax.lax.dynamic_slice(full, (i * br, j * bc), (br, bc))
+
+
+def reshard_permute(t: jax.Array, from_state: PlaneState,
+                    to_plane: Tuple[str, str]) -> jax.Array:
+    """Optimized reshard for the layer-rotation pattern: the destination
+    plane is a *relabeling* of mesh-axis roles, so each block moves exactly
+    once — a pure permutation, g^2x less traffic than ``reshard_gather``.
+
+    For the residual case: source (r, c) rep p, destination (p, r) rep c.
+    Device (with role-coords r=i, c=j, p=k) holds source block (i, j) and
+    needs source block (k, i). We realize the move as two single-axis
+    ``ppermute`` steps (TPU ICI is a torus; each step is nearest-neighbor
+    friendly):
+
+      step 1 (along p): (i, j, k) <- (i, j, j')  block (i, j) -> every k
+              ... not needed: block (k, i) differs from (i, j) in *values*
+              of two coords, so we chain axis-wise shifts.
+
+    Implementation: we use ``all_to_all`` over the pair of axes expressed as
+    one gather over `p` (size g) followed by a dynamic slice: gather over p
+    collects blocks {(i, j) for this (r=i, c=j)} — that's not what we need
+    either, so the robust jax-native form is a single ``ppermute`` over the
+    *flattened* (r, c, p) axis tuple with the permutation computed on the
+    host. jax.lax.ppermute accepts an axis-name tuple for exactly this.
+    """
+    g = jax.lax.axis_size(from_state.row)
+    perm = []
+    # device logical coords under axis order (row, col, rep) = (i, j, k);
+    # flat index = ((i * g) + j) * g + k.
+    # destination device (i, j, k) needs source block (k, i), held by any
+    # source device with (row=k, col=i); choose rep coord = j for a bijection
+    # (src = (k, i, j)) -> cyclic coordinate rotation.
+    for i in range(g):
+        for j in range(g):
+            for k in range(g):
+                src = (k * g + i) * g + j
+                dst = (i * g + j) * g + k
+                perm.append((src, dst))
+    return jax.lax.ppermute(
+        t, (from_state.row, from_state.col, from_state.rep), perm)
+
+
+def reshard(t: jax.Array, from_state: PlaneState, to_plane: Tuple[str, str],
+            impl: str = "gather") -> jax.Array:
+    if (from_state.row, from_state.col) == to_plane:
+        return t
+    if impl == "permute":
+        return reshard_permute(t, from_state, to_plane)
+    return reshard_gather(t, from_state, to_plane)

@@ -1,0 +1,34 @@
+"""Low-precision collective communication (ScaleGNN §V-B).
+
+The paper casts FP32 partial sums to BF16 *only for the 3D-PMM all-reduces*,
+keeping numerically sensitive reductions (parallel RMSNorm, logit reduction
+in parallel cross-entropy) in FP32, and all local compute in FP32. On TPU the
+ICI moves bf16 natively, halving the volume of the dominant collectives —
+identical intent, jax-native mechanism.
+"""
+from __future__ import annotations
+
+from typing import Union
+
+import jax
+import jax.numpy as jnp
+
+AxisName = Union[str, tuple]
+
+
+def psum_maybe_bf16(x: jax.Array, axis_name: AxisName,
+                    bf16: bool) -> jax.Array:
+    """All-reduce a partial sum, optionally communicating in bfloat16.
+
+    FP32 master values: the cast happens only on the wire (paper §V-B).
+    """
+    if bf16 and x.dtype == jnp.float32:
+        return jax.lax.psum(x.astype(jnp.bfloat16), axis_name).astype(
+            jnp.float32)
+    return jax.lax.psum(x, axis_name)
+
+
+def psum_fp32(x: jax.Array, axis_name: AxisName) -> jax.Array:
+    """Always-FP32 all-reduce for numerically sensitive reductions
+    (RMSNorm sum-of-squares, logsumexp terms)."""
+    return jax.lax.psum(x, axis_name)

@@ -1,0 +1,339 @@
+"""Communication-free uniform vertex sampling (ScaleGNN §III-D, Alg. 1 & 2).
+
+Every function here is pure JAX with static shapes, designed to run *inside*
+the jitted SPMD train step on every device independently. The sampled vertex
+set is derived from ``(seed, step)`` alone, so all devices of a data-parallel
+group compute the identical sample with zero communication — the paper's
+central claim.
+
+Two sampling modes (DESIGN.md §3/§5):
+
+* ``exact``      — the paper's Eq. 20: ``S = sort(perm(N)[:B])``. Used on a
+                   single device (accuracy experiments) and anywhere static
+                   shapes permit.
+* ``stratified`` — the TPU static-shape variant: exactly ``b = B/g`` vertices
+                   per contiguous vertex range. Each device's row/column
+                   sample then has a *static* size, which SPMD requires.
+                   Inclusion stays uniform (``B/N``); the conditional pair
+                   inclusion probability becomes range-dependent and the edge
+                   rescaling (Eq. 23-24) uses the corresponding constant:
+                   ``p_same = (b-1)/(n_loc-1)`` within a range,
+                   ``p_cross = b/n_loc`` across ranges.  At g = 1 this is
+                   exactly the paper's scheme.
+
+Subgraph extraction follows Alg. 2's four phases literally — binary-search
+range location is replaced by *construction* (stratified samples are born
+range-local), phase 2 is the prefix-sum vectorized CSR row extraction, phase
+3 the binary-search column membership filter + compact remap, phase 4 the
+rescale/assembly. The output is a dense (b_r, b_c) block: on TPU the MXU
+wants dense tiles, and a mini-batch block is small (DESIGN.md §3).
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class SampleConfig(NamedTuple):
+    """Static sampling parameters."""
+
+    n_pad: int          # padded vertex count (multiple of g)
+    g: int              # grid side; 1 for single-device
+    batch: int          # total mini-batch size B (multiple of g)
+    e_cap: int          # static bound on extracted nnz per block
+
+    @property
+    def n_local(self) -> int:
+        return self.n_pad // self.g
+
+    @property
+    def b_local(self) -> int:
+        return self.batch // self.g
+
+
+# ---------------------------------------------------------------------------
+# Vertex sampling (Eq. 20)
+# ---------------------------------------------------------------------------
+
+def step_key(seed: int | jax.Array, step: jax.Array,
+             dp_index: jax.Array | int = 0) -> jax.Array:
+    """The shared per-step PRNG key: fold (step, dp_group) into the base seed.
+
+    All devices in one DP group derive the same key -> the same sample,
+    communication-free. Different DP groups fold in their group index and
+    train on independent mini-batches (§IV-A).
+    """
+    key = jax.random.PRNGKey(seed) if isinstance(seed, int) else seed
+    key = jax.random.fold_in(key, step)
+    return jax.random.fold_in(key, dp_index)
+
+
+def sample_uniform_exact(key: jax.Array, n: int, batch: int) -> jax.Array:
+    """Paper Eq. 20: B distinct vertices uniformly, sorted ascending."""
+    perm = jax.random.permutation(key, n)
+    return jnp.sort(perm[:batch])
+
+
+def sample_stratified(key: jax.Array, cfg: SampleConfig) -> jax.Array:
+    """Balanced variant: b = B/g distinct vertices per contiguous range.
+
+    Returns (g, b) *global* vertex ids, sorted within each range. Row ``i``
+    is the sample for vertex range ``[i * n_local, (i+1) * n_local)``.
+    """
+    n_loc, b = cfg.n_local, cfg.b_local
+    keys = jax.random.split(key, cfg.g)
+
+    def per_range(i, k):
+        perm = jax.random.permutation(k, n_loc)
+        return jnp.sort(perm[:b]) + i * n_loc
+
+    return jax.vmap(per_range)(jnp.arange(cfg.g), keys)
+
+
+# ---------------------------------------------------------------------------
+# Induced-subgraph extraction (Alg. 2 phases 2-4), vectorized, static shapes
+# ---------------------------------------------------------------------------
+
+def _extract_triples(rp, ci, val, rows_local, cols_local, e_cap):
+    """Alg. 2 phases 2-3 (shared core): prefix-sum vectorized CSR row
+    extraction + binary-search column membership filter.
+
+    Returns (own, pos, member, v, col):
+      own    — (e_cap,) compact row index of each extracted slot
+      pos    — (e_cap,) compact column index (membership position)
+      member — (e_cap,) bool, slot is a real edge whose target is sampled
+      v      — (e_cap,) edge value
+      col    — (e_cap,) raw column id of each slot (local to the shard)
+    """
+    b_r = rows_local.shape[0]
+    b_c = cols_local.shape[0]
+
+    # Phase 2: per-row nnz -> prefix sum -> searchsorted back-map -> one
+    # coalesced gather (paper Alg. 2 lines 6-10).
+    r_cnt = rp[rows_local + 1] - rp[rows_local]
+    pfx = jnp.cumsum(r_cnt)
+    total = pfx[-1]
+    slot = jnp.arange(e_cap, dtype=jnp.int32)
+    own = jnp.searchsorted(pfx, slot, side="right").astype(jnp.int32)
+    own = jnp.clip(own, 0, b_r - 1)
+    row_start = pfx[own] - r_cnt[own]
+    offset = slot - row_start
+    src = rp[rows_local[own]] + offset
+    valid = slot < total
+    src = jnp.where(valid, src, 0)
+    col = ci[src]
+    v = val[src]
+
+    # Phase 3: membership + compact remap via one binary search
+    # (paper Alg. 2 lines 11-14).
+    pos = jnp.searchsorted(cols_local, col).astype(jnp.int32)
+    pos = jnp.clip(pos, 0, b_c - 1)
+    member = (cols_local[pos] == col) & valid
+    return own, pos, member, v, col
+
+
+def extract_dense_block(
+    rp: jax.Array,            # (n_local + 1,) int32 local row pointer
+    ci: jax.Array,            # (e_pad,) int32 local col ids, pad = n_local
+    val: jax.Array,           # (e_pad,) float32
+    rows_local: jax.Array,    # (b_r,) sorted local sampled row ids
+    cols_local: jax.Array,    # (b_c,) sorted local sampled col ids
+    e_cap: int,
+    *,
+    rescale_offdiag: jax.Array | float = 1.0,
+    is_diag_block: bool = False,
+    dtype=jnp.float32,
+) -> jax.Array:
+    """Extract the dense (b_r, b_c) sampled block of a padded-CSR shard.
+
+    ``e_cap`` must bound the total nnz of the sampled rows; entries beyond it
+    are dropped (choose ``e_cap = b_r * max_block_row_nnz`` for exactness).
+    """
+    b_r, b_c = rows_local.shape[0], cols_local.shape[0]
+    if ci.shape[0] == 0:                     # empty graph shard
+        return jnp.zeros((b_r, b_c), dtype=dtype)
+    own, pos, member, v, col = _extract_triples(
+        rp, ci, val, rows_local, cols_local, e_cap)
+
+    # Phase 4: unbiased rescale (Eq. 24) and assembly.
+    if is_diag_block:
+        # within a diagonal block, the sample strata for rows and columns
+        # coincide; u == v exactly when local ids match
+        diag = rows_local[own] == col
+        scale = jnp.where(diag, 1.0, rescale_offdiag)
+    else:
+        scale = rescale_offdiag
+    contrib = jnp.where(member, v * scale, 0.0).astype(dtype)
+    out = jnp.zeros((b_r, b_c), dtype=dtype)
+    return out.at[own, pos].add(contrib, mode="drop")
+
+
+def extract_dense_block_stratified(
+    rp: jax.Array, ci: jax.Array, val: jax.Array,
+    rows_local: jax.Array, cols_local: jax.Array, e_cap: int,
+    *,
+    row_range: jax.Array,     # scalar: vertex-range index of this block's rows
+    col_range: jax.Array,     # scalar: vertex-range index of this block's cols
+    inv_same: float,          # 1/p_same  (Eq. 23, within-range constant)
+    inv_cross: float,         # 1/p_cross (cross-range constant)
+    dtype=jnp.float32,
+) -> jax.Array:
+    """Stratified-sampling variant of the extraction: the rescale constant
+    depends on whether the edge crosses vertex ranges (DESIGN.md §5), and
+    self-loops (possible only when ``row_range == col_range``) stay
+    unrescaled (Eq. 24). ``row_range`` / ``col_range`` may be traced scalars
+    (``jax.lax.axis_index`` inside shard_map)."""
+    b_r, b_c = rows_local.shape[0], cols_local.shape[0]
+    if ci.shape[0] == 0:                     # empty graph shard
+        return jnp.zeros((b_r, b_c), dtype=dtype)
+    own, pos, member, v, col = _extract_triples(
+        rp, ci, val, rows_local, cols_local, e_cap)
+
+    same_range = row_range == col_range
+    diag = same_range & (rows_local[own] == col)
+    factor = jnp.where(diag, 1.0,
+                       jnp.where(same_range, inv_same, inv_cross))
+    contrib = jnp.where(member, v * factor, 0.0).astype(dtype)
+    out = jnp.zeros((b_r, b_c), dtype=dtype)
+    return out.at[own, pos].add(contrib, mode="drop")
+
+
+def rescale_constants(cfg: SampleConfig) -> Tuple[float, float]:
+    """(1/p_same, 1/p_cross) for the stratified sampler; Eq. 23 at g = 1."""
+    n_loc, b = cfg.n_local, cfg.b_local
+    p_same = (b - 1) / (n_loc - 1) if n_loc > 1 else 1.0
+    p_cross = b / n_loc
+    inv_same = 1.0 / p_same if p_same > 0 else 0.0
+    return inv_same, 1.0 / p_cross
+
+
+def extract_block_ell_stratified(
+    rp: jax.Array, ci: jax.Array, val: jax.Array,
+    rows_local: jax.Array, cols_local: jax.Array, e_cap: int,
+    *,
+    row_range: jax.Array, col_range: jax.Array,
+    inv_same: float, inv_cross: float,
+    bm: int, bn: int, n_slots: int,
+    dtype=jnp.float32,
+) -> Tuple[jax.Array, jax.Array]:
+    """Extract the sampled block directly into the block-ELL format consumed
+    by ``kernels/spmm_ell.py`` (EXPERIMENTS.md §Perf H3.4).
+
+    At production scale the sampled (b, b) blocks are >99% empty at tile
+    granularity (expected nnz per sampled row per column range ~ deg*B/N/g),
+    so the dense extraction wastes memory by the inverse tile density. Here
+    each nonzero is routed to its (row-block, col-block) tile; distinct
+    tiles per row-block are ranked by a sort+unique pass (static shapes
+    throughout) and scattered into ``n_slots`` ELL slots. Tiles beyond
+    ``n_slots`` are dropped — callers size n_slots from the degree bound
+    exactly like ``e_cap``.
+
+    Returns (tiles (n_rb, n_slots, bm, bn), colidx (n_rb, n_slots)).
+    """
+    b_r, b_c = rows_local.shape[0], cols_local.shape[0]
+    assert b_r % bm == 0 and b_c % bn == 0
+    n_rb, n_cb = b_r // bm, b_c // bn
+    if ci.shape[0] == 0:
+        return (jnp.zeros((n_rb, n_slots, bm, bn), dtype),
+                jnp.zeros((n_rb, n_slots), jnp.int32))
+
+    own, pos, member, v, col = _extract_triples(
+        rp, ci, val, rows_local, cols_local, e_cap)
+    same_range = row_range == col_range
+    diag = same_range & (rows_local[own] == col)
+    factor = jnp.where(diag, 1.0,
+                       jnp.where(same_range, inv_same, inv_cross))
+    contrib = jnp.where(member, v * factor, 0.0).astype(dtype)
+
+    rb = own // bm
+    cb = pos // bn
+    # rank distinct (rb, cb) tiles: sort keys, count uniques, rank within rb
+    big = jnp.int32(n_rb * n_cb)
+    key = jnp.where(member, rb * n_cb + cb, big).astype(jnp.int32)
+    skey = jnp.sort(key)
+    uniq = jnp.concatenate([jnp.ones((1,), bool),
+                            skey[1:] != skey[:-1]]) & (skey < big)
+    grank = jnp.cumsum(uniq) - 1                       # global tile rank
+    # first global rank of each row-block = rank of first key >= rb*n_cb
+    rb_first_pos = jnp.searchsorted(skey, jnp.arange(n_rb) * n_cb)
+    # global rank at a sorted position = #uniques before it
+    cum_uniq = jnp.concatenate([jnp.zeros((1,), grank.dtype),
+                                jnp.cumsum(uniq)])
+    rb_first_rank = cum_uniq[rb_first_pos]             # (n_rb,)
+    # per-entry: global rank via searchsorted into the sorted keys
+    entry_pos = jnp.searchsorted(skey, key)
+    entry_rank = grank[jnp.clip(entry_pos, 0, e_cap - 1)]
+    slot = entry_rank - rb_first_rank[jnp.clip(rb, 0, n_rb - 1)]
+    ok = member & (slot >= 0) & (slot < n_slots)
+    slot_c = jnp.clip(slot, 0, n_slots - 1)
+
+    tiles = jnp.zeros((n_rb, n_slots, bm, bn), dtype)
+    tiles = tiles.at[rb, slot_c, own % bm, pos % bn].add(
+        jnp.where(ok, contrib, 0.0), mode="drop")
+    colidx = jnp.zeros((n_rb, n_slots), jnp.int32)
+    colidx = colidx.at[rb, slot_c].max(
+        jnp.where(ok, cb, 0).astype(jnp.int32), mode="drop")
+    return tiles, colidx
+
+
+# ---------------------------------------------------------------------------
+# Single-device mini-batch (Alg. 1) — used by accuracy experiments & oracles
+# ---------------------------------------------------------------------------
+
+class MiniBatch(NamedTuple):
+    adj: jax.Array        # (B, B) dense rescaled \tilde{A}_S
+    feats: jax.Array      # (B, d_in)
+    labels: jax.Array     # (B,)
+    vertex_ids: jax.Array  # (B,) global ids (the sorted sample S)
+
+
+def make_minibatch_exact(
+    key: jax.Array,
+    rp: jax.Array, ci: jax.Array, val: jax.Array,
+    features: jax.Array, labels: jax.Array,
+    n: int, batch: int, e_cap: int,
+) -> MiniBatch:
+    """Paper Alg. 1 on one device: sample S, build dense rescaled A_S, slice
+    features/labels (Eq. 26)."""
+    s = sample_uniform_exact(key, n, batch)
+    inv_p = (n - 1) / (batch - 1)          # 1/p, Eq. 23
+    adj = extract_dense_block(rp, ci, val, s, s, e_cap,
+                              rescale_offdiag=inv_p, is_diag_block=True)
+    return MiniBatch(adj=adj, feats=features[s], labels=labels[s],
+                     vertex_ids=s)
+
+
+def make_minibatch_stratified(
+    key: jax.Array,
+    rp: jax.Array, ci: jax.Array, val: jax.Array,
+    features: jax.Array, labels: jax.Array,
+    cfg: SampleConfig,
+) -> MiniBatch:
+    """Single-device reference of the stratified sampler (g ranges, one
+    device): used by property tests to validate the distributed path."""
+    s2d = sample_stratified(key, cfg)                    # (g, b)
+    s = s2d.reshape(-1)                                  # sorted globally
+    inv_same, inv_cross = rescale_constants(cfg)
+    n_loc, b = cfg.n_local, cfg.b_local
+
+    # assemble the (B, B) adjacency block-by-block so each block uses the
+    # correct pairwise constant
+    def block(i, j):
+        rows = s2d[i] - i * n_loc
+        cols = s2d[j] - j * n_loc
+        # view of rows range i: the full-graph CSR restricted to range i is
+        # emulated by offsetting the row ids (single-device layout: rp is the
+        # global row pointer, ci global columns)
+        return extract_dense_block(
+            rp, ci, val, rows + i * n_loc, cols + j * n_loc, cfg.e_cap,
+            rescale_offdiag=inv_same if i == j else inv_cross,
+            is_diag_block=(i == j))
+
+    adj = jnp.block([[block(i, j) for j in range(cfg.g)]
+                     for i in range(cfg.g)])
+    del b
+    return MiniBatch(adj=adj, feats=features[s], labels=labels[s],
+                     vertex_ids=s)

@@ -1,0 +1,4 @@
+from repro.data.pipeline import (TokenStream, make_lm_batches,
+                                 shard_batch_for_mesh)
+
+__all__ = ["TokenStream", "make_lm_batches", "shard_batch_for_mesh"]

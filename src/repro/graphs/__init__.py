@@ -1,0 +1,32 @@
+"""Graph data substrate: CSR utilities, synthetic generators, partitioning."""
+from repro.graphs.csr import (
+    CSRMatrix,
+    coo_to_csr,
+    csr_to_dense,
+    add_self_loops,
+    sym_normalize,
+    csr_transpose,
+)
+from repro.graphs.synthetic import (
+    make_sbm_graph,
+    make_rmat_graph,
+    make_synthetic_dataset,
+    SyntheticDataset,
+)
+from repro.graphs.partition import (
+    block_ranges,
+    partition_csr_2d,
+    PartitionedGraph,
+    build_partitioned_graph,
+)
+from repro.graphs.datasets import DATASETS, DatasetMeta, get_dataset
+
+__all__ = [
+    "CSRMatrix", "coo_to_csr", "csr_to_dense", "add_self_loops",
+    "sym_normalize", "csr_transpose",
+    "make_sbm_graph", "make_rmat_graph", "make_synthetic_dataset",
+    "SyntheticDataset",
+    "block_ranges", "partition_csr_2d", "PartitionedGraph",
+    "build_partitioned_graph",
+    "DATASETS", "DatasetMeta", "get_dataset",
+]

@@ -1,0 +1,12 @@
+"""Pallas TPU kernels for the paper's compute hot-spots.
+
+* ``spmm_ell``        — block-ELL SpMM (GCN aggregation, Eq. 5/27; the
+                        CSR-gather -> MXU-tile adaptation, DESIGN.md §3)
+* ``fused_layer``     — fused RMSNorm+ReLU+dropout+residual (paper §V-C)
+* ``flash_attention`` — VMEM-resident running-softmax attention (the
+                        fusion identified by EXPERIMENTS.md §Perf H1.2)
+
+``ops``  — jit'd wrappers with custom VJPs (public API)
+``ref``  — pure-jnp oracles used by the allclose test sweeps
+"""
+from repro.kernels import ops, ref

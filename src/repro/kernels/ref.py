@@ -1,0 +1,86 @@
+"""Pure-jnp oracles for every Pallas kernel (the ``ref.py`` contract).
+
+Tests sweep shapes/dtypes and ``assert_allclose`` kernel vs oracle.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def block_ell_to_dense(tiles: jax.Array, colidx: jax.Array,
+                       n_cols: int) -> jax.Array:
+    """Reassemble the dense matrix represented by a block-ELL operand."""
+    n_rb, n_slots, bm, bn = tiles.shape
+    out = jnp.zeros((n_rb * bm, n_cols), tiles.dtype)
+    for i in range(n_rb):
+        for s in range(n_slots):
+            c = colidx[i, s]
+            out = jax.lax.dynamic_update_slice(
+                out,
+                jax.lax.dynamic_slice(
+                    out, (i * bm, c * bn), (bm, bn)) + tiles[i, s],
+                (i * bm, c * bn))
+    return out
+
+
+def spmm_ell_ref(tiles: jax.Array, colidx: jax.Array,
+                 x: jax.Array) -> jax.Array:
+    """Oracle for ``spmm_ell_pallas``: accumulate slot-by-slot in jnp."""
+    n_rb, n_slots, bm, bn = tiles.shape
+    d = x.shape[1]
+
+    def row_block(i):
+        def slot(s, acc):
+            c = colidx[i, s]
+            xblk = jax.lax.dynamic_slice(x, (c * bn, 0), (bn, d))
+            return acc + tiles[i, s] @ xblk
+        return jax.lax.fori_loop(0, n_slots, slot,
+                                 jnp.zeros((bm, d), jnp.float32))
+
+    return jnp.concatenate([row_block(i) for i in range(n_rb)],
+                           axis=0).astype(x.dtype)
+
+
+def fused_layer_ref(
+    x: jax.Array, scale: jax.Array,
+    dropout_mask: Optional[jax.Array], residual: Optional[jax.Array],
+    *, dropout_rate: float = 0.0, eps: float = 1e-6,
+    use_rmsnorm: bool = True, use_relu: bool = True,
+) -> jax.Array:
+    """Oracle for ``fused_layer_pallas``: the unfused Eq. 7-10 chain."""
+    h = x.astype(jnp.float32)
+    if use_rmsnorm:
+        ms = jnp.mean(jnp.square(h), axis=-1, keepdims=True)
+        h = h * jax.lax.rsqrt(ms + eps) * scale.astype(jnp.float32)
+    if use_relu:
+        h = jax.nn.relu(h)
+    if dropout_mask is not None:
+        h = jnp.where(dropout_mask, h / (1.0 - dropout_rate), 0.0)
+    if residual is not None:
+        h = h + residual.astype(jnp.float32)
+    return h.astype(x.dtype)
+
+
+def flash_attention_ref(q, k, v, *, causal=True, window=None):
+    """Oracle for ``flash_attention_pallas``: dense masked softmax."""
+    b, sq, h, hd = q.shape
+    t, kv = k.shape[1], k.shape[2]
+    g = h // kv
+    kk = jnp.repeat(k, g, axis=2).astype(jnp.float32)
+    vv = jnp.repeat(v, g, axis=2).astype(jnp.float32)
+    s = jnp.einsum("bqhd,bthd->bhqt", q.astype(jnp.float32), kk) \
+        / jnp.sqrt(jnp.asarray(hd, jnp.float32))
+    qp = jnp.arange(sq)
+    kp = jnp.arange(t)
+    allow = jnp.ones((sq, t), bool)
+    if causal:
+        allow &= kp[None] <= qp[:, None]
+    if window is not None:
+        allow &= kp[None] > (qp[:, None] - window)
+    s = jnp.where(allow[None, None], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhqt,bthd->bqhd", p, vv)
+    return out.astype(q.dtype)

@@ -1,0 +1,116 @@
+"""Block-ELL SpMM Pallas TPU kernel — the paper's SpMM hot-spot (Eq. 5/27),
+adapted to the TPU memory hierarchy (DESIGN.md §3).
+
+GPU frameworks run GCN aggregation as CSR SpMM with per-row gathers; the TPU
+MXU is a 128x128 systolic array that wants dense tiles resident in VMEM. We
+therefore store the mini-batch adjacency A_S in *block-ELL* format:
+
+  rows are grouped into blocks of ``bm``; each row-block holds a fixed
+  number ``S`` of column-block slots (ELL padding), each slot being a dense
+  (bm, bn) tile plus the column-block index it came from:
+
+    tiles  : (n_rb, S, bm, bn) float32
+    colidx : (n_rb, S)         int32      (padding slots point at block 0
+                                           with an all-zero tile)
+
+The kernel computes ``out = A @ X`` tile-by-tile: grid over (row-block,
+feature-tile); the feature operand X stays resident in VMEM and the inner
+``fori_loop`` walks the slots, dynamically slicing the X row-block named by
+``colidx`` — offsets are multiples of ``bn`` so every VMEM access stays
+tile-aligned for the MXU. Empty column-blocks are simply never touched: for
+a mini-batch adjacency with block-density p, the kernel does p x the FLOPs
+and p x the HBM traffic of a dense matmul.
+
+Validated on CPU via ``interpret=True`` against ``ref.spmm_ell_ref``.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _spmm_ell_kernel(colidx_ref, tiles_ref, x_ref, o_ref, *, n_slots: int,
+                     bn: int):
+    """One (row-block i, feature-tile j) grid cell: accumulate all slots."""
+    bm = o_ref.shape[0]
+    dt = o_ref.shape[1]
+
+    def body(s, acc):
+        c = colidx_ref[0, s]                            # column-block id
+        xblk = x_ref[pl.dslice(c * bn, bn), :]          # (bn, dt) aligned
+        tile = tiles_ref[0, s]                          # (bm, bn)
+        return acc + jnp.dot(tile, xblk,
+                             preferred_element_type=jnp.float32)
+
+    acc = jax.lax.fori_loop(
+        0, n_slots, body, jnp.zeros((bm, dt), jnp.float32))
+    o_ref[...] = acc.astype(o_ref.dtype)
+
+
+def spmm_ell_pallas(tiles: jax.Array, colidx: jax.Array, x: jax.Array,
+                    *, feat_tile: int = 128,
+                    interpret: bool = True) -> jax.Array:
+    """out[i*bm:(i+1)*bm] = sum_s tiles[i, s] @ x[colidx[i, s]*bn : +bn].
+
+    ``interpret=True`` executes the kernel body in Python on CPU (this
+    container); on a real TPU pass ``interpret=False``.
+    """
+    n_rb, n_slots, bm, bn = tiles.shape
+    n_rows_x, d = x.shape
+    assert n_rows_x % bn == 0, "x rows must be a multiple of bn"
+    dt = min(feat_tile, d)
+    assert d % dt == 0, f"feature dim {d} not a multiple of tile {dt}"
+
+    grid = (n_rb, d // dt)
+    kernel = functools.partial(_spmm_ell_kernel, n_slots=n_slots, bn=bn)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            # slot table: one row-block's indices per grid cell
+            pl.BlockSpec((1, n_slots), lambda i, j: (i, 0)),
+            # this row-block's dense tiles: (1, S, bm, bn) in VMEM
+            pl.BlockSpec((1, n_slots, bm, bn), lambda i, j: (i, 0, 0, 0)),
+            # X: all rows resident, one feature tile per grid cell
+            pl.BlockSpec((n_rows_x, dt), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, dt), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((n_rb * bm, d), x.dtype),
+        interpret=interpret,
+    )(colidx, tiles, x)
+
+
+def dense_to_block_ell(adj: jax.Array, bm: int, bn: int, n_slots: int):
+    """Convert a dense (R, C) matrix to block-ELL (host/trace-time helper).
+
+    ``n_slots`` fixes the slot count (static shape); row-blocks with more
+    nonzero column-blocks than ``n_slots`` keep the ``n_slots`` densest ones
+    (tests always pass an exact bound so nothing is dropped).
+    """
+    r, c = adj.shape
+    assert r % bm == 0 and c % bn == 0
+    n_rb, n_cb = r // bm, c // bn
+    blocks = adj.reshape(n_rb, bm, n_cb, bn).transpose(0, 2, 1, 3)
+    # score column-blocks by L1 mass; pick top n_slots per row-block
+    mass = jnp.abs(blocks).sum(axis=(2, 3))            # (n_rb, n_cb)
+    _, top = jax.lax.top_k(mass, n_slots)              # (n_rb, n_slots)
+    colidx = jnp.sort(top, axis=1).astype(jnp.int32)
+    tiles = jnp.take_along_axis(
+        blocks, colidx[:, :, None, None], axis=1)      # (n_rb, S, bm, bn)
+    # zero out padding slots (blocks that are actually empty)
+    slot_mass = jnp.take_along_axis(mass, colidx, axis=1)
+    tiles = tiles * (slot_mass[:, :, None, None] > 0)
+    colidx = jnp.where(slot_mass > 0, colidx, 0)
+    return tiles, colidx
+
+
+def block_density(adj: jax.Array, bm: int, bn: int) -> jax.Array:
+    """Fraction of (bm, bn) blocks with any nonzero — the kernel's work
+    ratio vs dense."""
+    r, c = adj.shape
+    blocks = adj.reshape(r // bm, bm, c // bn, bn).transpose(0, 2, 1, 3)
+    nz = (jnp.abs(blocks).sum(axis=(2, 3)) > 0)
+    return nz.mean()

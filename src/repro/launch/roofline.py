@@ -1,0 +1,304 @@
+"""Roofline analysis from the compiled dry-run artifacts.
+
+Three terms per (arch x shape x mesh), in seconds (v5e constants):
+
+  compute    = HLO_FLOPs_per_device / 197e12           (bf16 MXU peak)
+  memory     = HLO_bytes_per_device / 819e9            (HBM bandwidth)
+  collective = collective_bytes_per_device / (3 * 50e9)  (ICI links/chip)
+
+``compiled.cost_analysis()`` counts while-loop bodies ONCE, but our models
+scan over layers (and microbatches), so this module re-derives costs from
+the partitioned HLO text with a recursive computation-graph walk that
+multiplies loop bodies by their trip counts:
+
+  * FLOPs  — from every ``dot`` (2 * numel(result) * contracted_dim);
+             convolutions and element-wise FLOPs are negligible for these
+             models and noted as such.
+  * bytes  — sum of operand + result sizes of dots, plus result sizes of
+             every other tensor op (a standard traffic proxy: each value is
+             produced once; fusion makes this an upper bound on HBM writes
+             and the dot-operand sum a lower bound on reads).
+  * collective bytes — result sizes of all-reduce / all-gather /
+             reduce-scatter / all-to-all / collective-permute.
+
+Trip counts come from each while's condition computation
+(``compare(iv, constant)``). The analyzer is validated by tests against an
+analytic 6*N*D FLOPs estimate on a known config.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import re
+from typing import Dict, List, Optional, Tuple
+
+# --- TPU v5e hardware constants (per chip) ---
+PEAK_FLOPS = 197e12          # bf16
+HBM_BW = 819e9               # bytes/s
+ICI_BW_PER_LINK = 50e9       # bytes/s (specified "~50 GB/s/link")
+ICI_LINKS = 3                # torus links usable concurrently (2D torus +
+                             # wraparound; conservative)
+
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "f16": 2, "bf16": 2, "s64": 8,
+                "s32": 4, "u64": 8, "u32": 4, "s16": 2, "u16": 2,
+                "s8": 1, "u8": 1, "pred": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+                "c64": 8, "c128": 16}
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+# ops whose results are treated as HBM traffic (see analyze_hlo).
+# `copy` is tracked separately: on this CPU backend most copies are SPMD
+# resharding artifacts ("involuntary full rematerialization") that a TPU
+# compilation would not emit; they are reported as `bytes_copy` but kept
+# out of the memory roofline term.
+_MATERIALIZING = ("gather", "scatter", "dynamic-update-slice",
+                  "dynamic-slice", "reduce", "reduce-window", "sort",
+                  "concatenate", "pad", "transpose", "convolution",
+                  "slice", "select-and-scatter")
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_COMP_HDR = re.compile(r"^(?:ENTRY )?%?([\w.\-]+)\s+\(.*\)\s*->", re.M)
+
+
+def _parse_shape(s: str) -> Tuple[Optional[str], List[int]]:
+    m = _SHAPE_RE.match(s)
+    if not m:
+        return None, []
+    dt, dims = m.groups()
+    return dt, [int(d) for d in dims.split(",") if d]
+
+
+def _shape_bytes(s: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(s):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+@dataclasses.dataclass
+class CompCost:
+    flops: float = 0.0
+    bytes: float = 0.0
+    bytes_copy: float = 0.0
+    coll: Dict[str, float] = dataclasses.field(
+        default_factory=lambda: {k: 0.0 for k in _COLLECTIVES})
+    calls: List[Tuple[str, str, float]] = dataclasses.field(
+        default_factory=list)   # (kind, callee, multiplier)
+
+
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*((?:\([^)]*\)|\S+))\s+"
+    r"([\w\-]+)\((.*)$")
+
+
+def split_computations(hlo: str) -> Dict[str, List[str]]:
+    """computation name -> list of instruction lines."""
+    comps: Dict[str, List[str]] = {}
+    cur = None
+    for line in hlo.splitlines():
+        # computation headers sit at column 0 (possibly 'ENTRY'), contain
+        # ') -> ' and open a brace; parameter lists may nest parentheses
+        if (not line.startswith(" ") and ") -> " in line
+                and line.rstrip().endswith("{")):
+            hdr = re.match(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\(", line)
+            if hdr:
+                cur = hdr.group(1)
+                comps[cur] = []
+                continue
+        if line.startswith("}"):
+            cur = None
+            continue
+        if cur is not None and "=" in line:
+            comps[cur].append(line)
+    return comps
+
+
+def _dot_flops(result_shape: str, operands_text: str,
+               shapes: Dict[str, str]) -> float:
+    """2 * numel(result) * contracted-dim-size.
+
+    ``operands_text`` is the text AFTER ``dot(`` so the first %name is the
+    lhs operand (not the instruction's own result name)."""
+    dt, rdims = _parse_shape(result_shape)
+    numel = 1
+    for d in rdims:
+        numel *= d
+    m = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", operands_text)
+    ops = re.findall(r"%([\w.\-]+)", operands_text)
+    k = 1
+    if m and ops:
+        lhs_shape = shapes.get(ops[0], "")
+        _, ldims = _parse_shape(lhs_shape)
+        for idx in m.group(1).split(","):
+            if idx and int(idx) < len(ldims):
+                k *= ldims[int(idx)]
+    return 2.0 * numel * k
+
+
+def _trip_count(cond_lines: List[str]) -> float:
+    """Extract the loop bound from a while condition computation."""
+    consts = {}
+    for ln in cond_lines:
+        m = re.match(r"\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*\S+\s+constant\("
+                     r"(-?\d+)\)", ln)
+        if m:
+            consts[m.group(1)] = int(m.group(2))
+    for ln in cond_lines:
+        # the compare may be a raw `compare(...)` or a `wrapped_compare`
+        # fusion whose operand is the bound constant
+        if "compare" in ln:
+            ops = re.findall(r"%([\w.\-]+)", ln)
+            for o in ops:
+                if o in consts and consts[o] > 0:
+                    return float(consts[o])
+    return 1.0
+
+
+def analyze_hlo(hlo: str) -> Dict[str, float]:
+    """Loop-aware per-device cost model (see module docstring)."""
+    comps = split_computations(hlo)
+
+    # per-computation local costs + call edges
+    local: Dict[str, CompCost] = {}
+    for name, lines in comps.items():
+        cost = CompCost()
+        shapes: Dict[str, str] = {}
+        # first pass: symbol table (incl. parameters)
+        for ln in lines:
+            m = _INSTR_RE.match(ln)
+            if m:
+                shapes[m.group(1)] = m.group(2)
+        for ln in lines:
+            m = _INSTR_RE.match(ln)
+            if not m:
+                continue
+            res_name, res_shape, op, rest = m.groups()
+            rb = _shape_bytes(res_shape)
+            if op == "dot":
+                fl = _dot_flops(res_shape, rest, shapes)
+                cost.flops += fl
+                # dot reads both operands + writes result
+                ops_ = re.findall(r"%([\w.\-]+)", rest)
+                for o in ops_[:2]:
+                    cost.bytes += _shape_bytes(shapes.get(o, ""))
+                cost.bytes += rb
+            elif op in _COLLECTIVES:
+                cost.coll[op] += rb
+                cost.bytes += rb
+            elif op == "while":
+                mm = re.search(r"condition=%?([\w.\-]+),\s*body=%?"
+                               r"([\w.\-]+)", ln)
+                if mm:
+                    cond, body = mm.groups()
+                    tc = _trip_count(comps.get(cond, []))
+                    cost.calls.append(("while", body, tc))
+            elif op in ("call", "fusion", "custom-call", "conditional",
+                        "map"):
+                for mm in re.finditer(
+                        r"(?:to_apply|calls|body|branch_computations=\{)"
+                        r"=?%?([\w.\-]+)", ln):
+                    callee = mm.group(1)
+                    if callee in comps:
+                        cost.calls.append((op, callee, 1.0))
+                cost.bytes += rb
+            elif op == "copy":
+                cost.bytes_copy += rb
+            elif op in _MATERIALIZING:
+                # ops whose results plausibly round-trip HBM on TPU;
+                # fused element-wise chains live in VMEM/VREGs and are
+                # deliberately NOT counted (counting them quadruples the
+                # term and reflects the CPU backend, not the target)
+                cost.bytes += rb
+                if op in ("gather", "scatter", "dynamic-update-slice"):
+                    ops_ = re.findall(r"%([\w.\-]+)", rest)
+                    if ops_:
+                        cost.bytes += _shape_bytes(shapes.get(ops_[0], ""))
+        local[name] = cost
+
+    # which computations are called from where (to find the entry)
+    called = set()
+    for c in local.values():
+        for _, callee, _ in c.calls:
+            called.add(callee)
+    roots = [n for n in comps if n not in called]
+
+    memo: Dict[str, Tuple[float, float, float, Dict[str, float]]] = {}
+
+    def total(name: str, depth=0):
+        if name in memo:
+            return memo[name]
+        if depth > 64 or name not in local:
+            return 0.0, 0.0, 0.0, {k: 0.0 for k in _COLLECTIVES}
+        c = local[name]
+        fl, by, bc = c.flops, c.bytes, c.bytes_copy
+        co = dict(c.coll)
+        for _, callee, mult in c.calls:
+            f2, b2, bc2, c2 = total(callee, depth + 1)
+            fl += mult * f2
+            by += mult * b2
+            bc += mult * bc2
+            for k in co:
+                co[k] += mult * c2[k]
+        memo[name] = (fl, by, bc, co)
+        return memo[name]
+
+    fl = by = bc = 0.0
+    co = {k: 0.0 for k in _COLLECTIVES}
+    for r in roots:
+        f2, b2, bc2, c2 = total(r)
+        fl += f2
+        by += b2
+        bc += bc2
+        for k in co:
+            co[k] += c2[k]
+    return {"flops": fl, "bytes": by, "bytes_copy": bc,
+            **{f"coll_{k}": v for k, v in co.items()},
+            "coll_total": sum(co.values())}
+
+
+# ---------------------------------------------------------------------------
+# Roofline terms + report
+# ---------------------------------------------------------------------------
+
+def roofline_terms(costs: Dict[str, float]) -> Dict[str, float]:
+    t_compute = costs["flops"] / PEAK_FLOPS
+    t_memory = costs["bytes"] / HBM_BW
+    t_coll = costs["coll_total"] / (ICI_LINKS * ICI_BW_PER_LINK)
+    dominant = max(("compute", t_compute), ("memory", t_memory),
+                   ("collective", t_coll), key=lambda kv: kv[1])[0]
+    return {"t_compute_s": t_compute, "t_memory_s": t_memory,
+            "t_collective_s": t_coll, "dominant": dominant}
+
+
+def model_flops(cfg, shape, n_devices: int) -> float:
+    """Analytic MODEL_FLOPS per device: 6*N*D (dense) / 6*N_active*D (MoE)
+    for training; 2*N*D forward-only for prefill; 2*N_active per token for
+    decode."""
+    n_active = cfg.num_active_params()
+    tokens = shape.global_batch * shape.seq_len
+    if shape.kind == "train":
+        total = 6.0 * n_active * tokens
+    elif shape.kind == "prefill":
+        total = 2.0 * n_active * tokens
+    else:  # decode: ONE token per sequence
+        total = 2.0 * n_active * shape.global_batch
+    return total / n_devices
+
+
+def load_dryrun_records(dirpath: str) -> List[dict]:
+    recs = []
+    if not os.path.isdir(dirpath):
+        return recs
+    for fn in sorted(os.listdir(dirpath)):
+        if fn.endswith(".json"):
+            with open(os.path.join(dirpath, fn)) as f:
+                recs.append(json.load(f))
+    return recs

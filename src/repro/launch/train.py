@@ -1,0 +1,125 @@
+"""End-to-end GNN training driver (the paper's workload).
+
+Runs ScaleGNN 4D training on a synthetic stand-in dataset on the local
+device set (use XLA_FLAGS=--xla_force_host_platform_device_count=N to get
+a multi-device host mesh). Example::
+
+    XLA_FLAGS=--xla_force_host_platform_device_count=16 \\
+    PYTHONPATH=src python -m repro.launch.train \\
+        --dataset ogbn-products --vertices 8192 --gd 2 --g 2 \\
+        --batch 1024 --steps 300 --target-acc 0.90
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint import save_checkpoint
+from repro.core import fourd, gcn_model as GM, pipeline as PL
+from repro.graphs import build_partitioned_graph, get_dataset
+from repro.optim import AdamW, linear_warmup_cosine
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dataset", default="ogbn-products")
+    ap.add_argument("--vertices", type=int, default=8192)
+    ap.add_argument("--gd", type=int, default=1, help="data-parallel groups")
+    ap.add_argument("--g", type=int, default=2, help="3D PMM cube side")
+    ap.add_argument("--batch", type=int, default=1024)
+    ap.add_argument("--d-hidden", type=int, default=128)
+    ap.add_argument("--layers", type=int, default=3)
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--lr", type=float, default=5e-3)
+    ap.add_argument("--dropout", type=float, default=0.2)
+    ap.add_argument("--bf16-collectives", action="store_true")
+    ap.add_argument("--fused-elementwise", action="store_true")
+    ap.add_argument("--reshard", default="gather",
+                    choices=["gather", "permute"])
+    ap.add_argument("--prefetch", action="store_true",
+                    help="overlap sampling with training (paper §V-A)")
+    ap.add_argument("--target-acc", type=float, default=None)
+    ap.add_argument("--eval-every", type=int, default=25)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    n_need = args.gd * args.g ** 3
+    assert len(jax.devices()) >= n_need, (
+        f"need {n_need} devices; set XLA_FLAGS="
+        f"--xla_force_host_platform_device_count={n_need}")
+
+    ds = get_dataset(args.dataset, scale_vertices=args.vertices,
+                     seed=args.seed)
+    pg = build_partitioned_graph(ds, g=args.g)
+    cfg = GM.GCNConfig(
+        d_in=pg.feature_dim, d_hidden=args.d_hidden,
+        num_layers=args.layers, num_classes=pg.num_classes,
+        dropout=args.dropout)
+    mesh = fourd.make_mesh_4d(args.gd, args.g)
+    opts = fourd.TrainOptions(
+        bf16_collectives=args.bf16_collectives,
+        fused_elementwise=args.fused_elementwise,
+        reshard_impl=args.reshard, dropout=args.dropout, seed=args.seed)
+    plan = fourd.build_plan(pg, cfg, mesh, batch=args.batch, opts=opts)
+
+    params = plan.shard_params(
+        GM.init_params(jax.random.PRNGKey(args.seed), cfg))
+    graph = plan.shard_graph(pg)
+    opt = AdamW(lr=linear_warmup_cosine(args.lr, 20, args.steps),
+                weight_decay=1e-4, grad_clip=1.0)
+    opt_state = opt.init(params)
+    eval_step = fourd.make_eval_step(plan)
+
+    print(f"ScaleGNN 4D: mesh {dict(mesh.shape)}  dataset {ds.name} "
+          f"N={pg.n} E={ds.num_edges} batch={args.batch} "
+          f"prefetch={args.prefetch}")
+
+    t0 = time.time()
+    if args.prefetch:
+        sample_fn, step_fn = PL.make_prefetched_train_step(plan, opt)
+        state = PL.PrefetchState(params, opt_state,
+                                 sample_fn(graph, jnp.asarray(0)))
+        for step in range(args.steps):
+            state, loss = step_fn(state, graph, jnp.asarray(step))
+            params = state.params
+            _maybe_report(args, eval_step, params, graph, step, loss, t0)
+            if _reached_target(args, eval_step, params, graph, step):
+                break
+    else:
+        train_step = fourd.make_train_step(plan, opt)
+        for step in range(args.steps):
+            params, opt_state, loss = train_step(
+                params, opt_state, graph, jnp.asarray(step))
+            _maybe_report(args, eval_step, params, graph, step, loss, t0)
+            if _reached_target(args, eval_step, params, graph, step):
+                break
+
+    acc = float(eval_step(params, graph))
+    dt = time.time() - t0
+    print(f"done: steps<= {args.steps}  time {dt:.1f}s  "
+          f"full-graph accuracy {acc:.4f}")
+    if args.ckpt_dir:
+        path = save_checkpoint(args.ckpt_dir, args.steps,
+                               jax.device_get(params))
+        print("checkpoint:", path)
+
+
+def _maybe_report(args, eval_step, params, graph, step, loss, t0):
+    if step % args.eval_every == 0:
+        acc = float(eval_step(params, graph))
+        print(f"step {step:5d}  loss {float(loss):.4f}  "
+              f"full-graph acc {acc:.4f}  t={time.time()-t0:.1f}s")
+
+
+def _reached_target(args, eval_step, params, graph, step):
+    if args.target_acc is None or step % args.eval_every:
+        return False
+    return float(eval_step(params, graph)) >= args.target_acc
+
+
+if __name__ == "__main__":
+    main()

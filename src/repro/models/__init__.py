@@ -1,0 +1,6 @@
+from repro.models.config import (ModelConfig, MoEConfig, SSMConfig,
+                                 EncoderConfig)
+from repro.models import layers, moe, ssm, transformer, sharding
+
+__all__ = ["ModelConfig", "MoEConfig", "SSMConfig", "EncoderConfig",
+           "layers", "moe", "ssm", "transformer", "sharding"]

@@ -1,0 +1,379 @@
+"""Transformer building blocks shared by all six architecture families.
+
+Pure functions over parameter dicts (no framework objects). Attention is
+implemented blockwise (flash-style running softmax over KV blocks via
+``lax.scan``) so activation memory is O(S * block) — required for the 32k
+prefill and 4k train shapes to fit the dry-run memory budget. GQA is kept
+in grouped form (no materialized KV repetition). All softmax/statistics run
+in FP32 regardless of the compute dtype.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+def rmsnorm(x: jax.Array, scale: jax.Array, eps: float) -> jax.Array:
+    x32 = x.astype(jnp.float32)
+    ms = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    return (x32 * jax.lax.rsqrt(ms + eps) * scale.astype(jnp.float32)
+            ).astype(x.dtype)
+
+
+def layernorm(x: jax.Array, scale: jax.Array, bias: Optional[jax.Array],
+              eps: float) -> jax.Array:
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x32 - mu), axis=-1, keepdims=True)
+    out = (x32 - mu) * jax.lax.rsqrt(var + eps) * scale.astype(jnp.float32)
+    if bias is not None:
+        out = out + bias.astype(jnp.float32)
+    return out.astype(x.dtype)
+
+
+def apply_norm(x: jax.Array, p: dict, kind: str, eps: float) -> jax.Array:
+    if kind.startswith("layernorm"):      # "layernorm" | "layernorm_nobias"
+        return layernorm(x, p["scale"], p.get("bias"), eps)
+    return rmsnorm(x, p["scale"], eps)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """Rotary embedding. x: (B, S, H, hd); positions: (B, S) or (S,)."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    if positions.ndim == 1:
+        positions = positions[None, :]
+    ang = positions[..., None].astype(jnp.float32) * freqs    # (B, S, half)
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos],
+                          axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Blockwise (flash-style) attention — grouped-query, causal/window/full
+# ---------------------------------------------------------------------------
+
+def _mask_block(q_pos, k_pos, causal: bool, window: Optional[int]):
+    """(Sq, Tb) boolean allow-mask."""
+    allow = jnp.ones((q_pos.shape[0], k_pos.shape[0]), bool)
+    if causal:
+        allow &= k_pos[None, :] <= q_pos[:, None]
+    if window is not None:
+        allow &= k_pos[None, :] > (q_pos[:, None] - window)
+    return allow
+
+
+# Causal q-chunking (perf knob, EXPERIMENTS.md §Perf H1.1): when set,
+# causal self-attention splits queries into chunks and each chunk attends
+# only to its KV prefix — fully-masked future blocks are never computed,
+# halving attention FLOPs/bytes at long context. None = off (baseline).
+_Q_CHUNK: Optional[int] = None
+
+# Attention layout constraint (perf knob, §Perf H1.3): (q_sharding,
+# kv_sharding) NamedShardings for the (B, S, H/KV, hd) tensors. Sharding q
+# over SEQUENCE and replicating KV makes the flash einsums fully local —
+# without it GSPMD contracts over a sharded head_dim and all-reduces f32
+# score blocks every scan step (measured 17 TB/device on llama4 prefill).
+_ATTN_SHARDING = None
+
+
+def set_q_chunk(n: Optional[int]) -> None:
+    global _Q_CHUNK
+    _Q_CHUNK = n
+
+
+def set_attn_sharding(qs_kv: Optional[tuple]) -> None:
+    global _ATTN_SHARDING
+    _ATTN_SHARDING = qs_kv
+
+
+def _constrain_attn(q, k, v):
+    if _ATTN_SHARDING is None:
+        return q, k, v
+    qs, kvs = _ATTN_SHARDING
+    try:
+        if q.shape[1] % qs.mesh.shape.get("model", 1) == 0:
+            q = jax.lax.with_sharding_constraint(q, qs)
+        k = jax.lax.with_sharding_constraint(k, kvs)
+        v = jax.lax.with_sharding_constraint(v, kvs)
+    except Exception:
+        pass
+    return q, k, v
+
+
+def blockwise_attention(
+    q: jax.Array,                 # (B, Sq, H, hd)
+    k: jax.Array,                 # (B, T, KV, hd)
+    v: jax.Array,                 # (B, T, KV, hd)
+    *,
+    causal: bool = True,
+    window: Optional[int] = None,
+    q_offset: int = 0,
+    kv_block: int = 512,
+) -> jax.Array:
+    """Flash-style attention: running softmax over KV blocks, O(Sq * blk)
+    score memory, and a custom VJP that RECOMPUTES scores in the backward
+    pass (saving only (out, logsumexp)) — without it the per-block scan
+    residuals re-materialize the full O(Sq * T) score matrix during each
+    layer's backward, which is exactly what breaks the 4k-train and
+    32k-prefill memory budgets. GQA stays grouped (no KV repetition)."""
+    b, sq, h, hd = q.shape
+    t, kv = k.shape[1], k.shape[2]
+    blk = min(kv_block, t)
+    if t % blk != 0:                      # pad KV to a block multiple;
+        pad = blk - t % blk               # padded keys are masked out below
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+
+    qc = _Q_CHUNK
+    if (qc and causal and window is None and q_offset == 0 and sq == t
+            and sq % qc == 0 and sq > qc):
+        # causal triangle: q chunk i needs only KV[0 : (i+1)*qc]; the
+        # autodiff of the slice accumulates dk/dv across chunks for free
+        outs = []
+        for qs in range(0, sq, qc):
+            qe = qs + qc
+            needed = min(-(-qe // blk) * blk, k.shape[1])
+            qi, ki, vi = _constrain_attn(q[:, qs:qe], k[:, :needed],
+                                         v[:, :needed])
+            outs.append(_flash(qi, ki, vi, min(t, needed), causal, None,
+                               qs, blk))
+        return jnp.concatenate(outs, axis=1)
+
+    q, k, v = _constrain_attn(q, k, v)
+    return _flash(q, k, v, t, causal, window, q_offset, blk)
+
+
+def _blk_mask(q_pos, k_pos, t_true, causal, window):
+    allow = _mask_block(q_pos, k_pos, causal, window)
+    return allow & (k_pos < t_true)[None, :]
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7))
+def _flash(q, k, v, t_true, causal, window, q_offset, blk):
+    out, _ = _flash_fwd_impl(q, k, v, t_true, causal, window, q_offset, blk)
+    return out
+
+
+def _flash_fwd_impl(q, k, v, t_true, causal, window, q_offset, blk):
+    b, sq, h, hd = q.shape
+    t_pad, kv = k.shape[1], k.shape[2]
+    g = h // kv
+    nb = t_pad // blk
+    scale = hd ** -0.5
+    # H1.2 (EXPERIMENTS.md §Perf): keep operands in their storage dtype
+    # (bf16 on TPU) and accumulate in f32 via preferred_element_type —
+    # halves the dominant attention-stream reads vs upcasting first
+    qg = q.reshape(b, sq, kv, g, hd)
+    q_pos = q_offset + jnp.arange(sq)
+    kb = k.reshape(b, nb, blk, kv, hd).swapaxes(0, 1)
+    vb = v.reshape(b, nb, blk, kv, hd).swapaxes(0, 1)
+
+    def body(carry, inp):
+        m, l, acc = carry
+        kblk, vblk, bi = inp
+        k_pos = bi * blk + jnp.arange(blk)
+        s = jnp.einsum("bqkgd,btkd->bkgqt", qg, kblk,
+                       preferred_element_type=jnp.float32) * scale
+        allow = _blk_mask(q_pos, k_pos, t_true, causal, window)
+        s = jnp.where(allow[None, None, None], s, -jnp.inf)
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        m_safe = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
+        p = jnp.where(allow[None, None, None],
+                      jnp.exp(s - m_safe[..., None]), 0.0)
+        corr = jnp.where(jnp.isfinite(m), jnp.exp(m - m_safe), 0.0)
+        l_new = l * corr + p.sum(axis=-1)
+        acc_new = acc * corr[..., None] + jnp.einsum(
+            "bkgqt,btkd->bkgqd", p.astype(q.dtype), vblk,
+            preferred_element_type=jnp.float32)
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((b, kv, g, sq), -jnp.inf, jnp.float32)
+    l0 = jnp.zeros((b, kv, g, sq), jnp.float32)
+    acc0 = jnp.zeros((b, kv, g, sq, hd), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(body, (m0, l0, acc0),
+                                  (kb, vb, jnp.arange(nb)))
+    out5 = acc / jnp.maximum(l, 1e-20)[..., None]    # (b, kv, g, sq, hd)
+    lse = jnp.where(jnp.isfinite(m), m, 0.0) + jnp.log(
+        jnp.maximum(l, 1e-20))                       # (b, kv, g, sq)
+    out = out5.transpose(0, 3, 1, 2, 4).reshape(b, sq, h, hd).astype(q.dtype)
+    return out, lse
+
+
+def _flash_fwd(q, k, v, t_true, causal, window, q_offset, blk):
+    out, lse = _flash_fwd_impl(q, k, v, t_true, causal, window, q_offset,
+                               blk)
+    return out, (q, k, v, out, lse)
+
+
+def _flash_bwd(t_true, causal, window, q_offset, blk, resid, dout):
+    """FlashAttention backward: one more pass over KV blocks, recomputing
+    p = exp(s - lse) per block. Saves O(Sq) statistics instead of O(Sq*T)
+    probabilities."""
+    q, k, v, out, lse = resid
+    b, sq, h, hd = q.shape
+    t_pad, kv = k.shape[1], k.shape[2]
+    g = h // kv
+    nb = t_pad // blk
+    scale = hd ** -0.5
+    qg = q.reshape(b, sq, kv, g, hd)
+    dog = dout.reshape(b, sq, kv, g, hd)
+    og = out.reshape(b, sq, kv, g, hd)
+    # D_i = sum_d dout_i * out_i  (b, kv, g, sq)
+    delta = jnp.einsum("bqkgd,bqkgd->bkgq", dog, og,
+                       preferred_element_type=jnp.float32)
+    q_pos = q_offset + jnp.arange(sq)
+    kb = k.reshape(b, nb, blk, kv, hd).swapaxes(0, 1)
+    vb = v.reshape(b, nb, blk, kv, hd).swapaxes(0, 1)
+
+    def body(dq_acc, inp):
+        kblk, vblk, bi = inp
+        k_pos = bi * blk + jnp.arange(blk)
+        s = jnp.einsum("bqkgd,btkd->bkgqt", qg, kblk,
+                       preferred_element_type=jnp.float32) * scale
+        allow = _blk_mask(q_pos, k_pos, t_true, causal, window)
+        p = jnp.where(allow[None, None, None],
+                      jnp.exp(s - lse[..., None]), 0.0)   # (b,kv,g,sq,blk)
+        pc = p.astype(q.dtype)
+        dv = jnp.einsum("bkgqt,bqkgd->btkd", pc, dog,
+                        preferred_element_type=jnp.float32)
+        dp = jnp.einsum("bqkgd,btkd->bkgqt", dog, vblk,
+                        preferred_element_type=jnp.float32)
+        ds = p * (dp - delta[..., None]) * scale
+        dsc = ds.astype(q.dtype)
+        dq_acc = dq_acc + jnp.einsum("bkgqt,btkd->bqkgd", dsc, kblk,
+                                     preferred_element_type=jnp.float32)
+        dk = jnp.einsum("bkgqt,bqkgd->btkd", dsc, qg,
+                        preferred_element_type=jnp.float32)
+        return dq_acc, (dk, dv)
+
+    dq0 = jnp.zeros((b, sq, kv, g, hd), jnp.float32)
+    dq, (dks, dvs) = jax.lax.scan(body, dq0, (kb, vb, jnp.arange(nb)))
+    dk = dks.swapaxes(0, 1).reshape(b, t_pad, kv, hd)
+    dv = dvs.swapaxes(0, 1).reshape(b, t_pad, kv, hd)
+    return (dq.reshape(b, sq, h, hd).astype(q.dtype),
+            dk.astype(k.dtype), dv.astype(v.dtype))
+
+
+_flash.defvjp(_flash_fwd, _flash_bwd)
+
+
+def decode_attention(
+    q: jax.Array,            # (B, 1, H, hd), already roped at its position
+    k_cache: jax.Array,      # (B, T, KV, hd), roped at insert time
+    v_cache: jax.Array,      # (B, T, KV, hd)
+    cache_len: jax.Array,    # scalar: number of valid entries (<= T)
+    *,
+    ring: bool = False,      # True for sliding-window ring buffers
+) -> jax.Array:
+    """Single-token attention over a (possibly ring) KV cache.
+
+    For ring buffers every slot is valid once the buffer has wrapped;
+    before wrapping, slots >= cache_len are masked.
+    """
+    b, _, h, hd = q.shape
+    t, kv = k_cache.shape[1], k_cache.shape[2]
+    g = h // kv
+    scale = hd ** -0.5
+    qg = q.reshape(b, kv, g, hd).astype(jnp.float32)
+    s = jnp.einsum("bkgd,btkd->bkgt", qg,
+                   k_cache.astype(jnp.float32)) * scale
+    # slots < min(cache_len, T) hold data; once a ring buffer has wrapped
+    # (cache_len >= T) every slot is valid — the same formula covers both
+    slot = jnp.arange(t)
+    valid = slot[None] < jnp.minimum(cache_len, t)
+    del ring
+    s = jnp.where(valid[:, None, None, :], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgt,btkd->bkgd", p, v_cache.astype(jnp.float32))
+    return out.reshape(b, 1, h, hd).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Attention block (projections + rope + attention + output)
+# ---------------------------------------------------------------------------
+
+def attn_project_qkv(p: dict, x: jax.Array, n_heads: int, n_kv: int,
+                     hd: int) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    b, s, _ = x.shape
+    q = x @ p["wq"]
+    k = x @ p["wk"]
+    v = x @ p["wv"]
+    if "bq" in p:
+        q = q + p["bq"]
+        k = k + p["bk"]
+        v = v + p["bv"]
+    return (q.reshape(b, s, n_heads, hd), k.reshape(b, s, n_kv, hd),
+            v.reshape(b, s, n_kv, hd))
+
+
+def attention_block(
+    p: dict, x: jax.Array, *, n_heads: int, n_kv: int, hd: int,
+    rope_theta: Optional[float], positions: jax.Array,
+    causal: bool = True, window: Optional[int] = None,
+    kv_block: int = 512,
+) -> jax.Array:
+    """Full-sequence self-attention (train / prefill)."""
+    b, s, d = x.shape
+    q, k, v = attn_project_qkv(p, x, n_heads, n_kv, hd)
+    if rope_theta is not None:
+        q = rope(q, positions, rope_theta)
+        k = rope(k, positions, rope_theta)
+    out = blockwise_attention(q, k, v, causal=causal, window=window,
+                              kv_block=kv_block)
+    return out.reshape(b, s, n_heads * hd) @ p["wo"]
+
+
+def cross_attention_block(
+    p: dict, x: jax.Array, kv_src: jax.Array, *, n_heads: int, n_kv: int,
+    hd: int, kv_block: int = 512,
+) -> jax.Array:
+    """Cross-attention (VLM image layers, whisper decoder). No RoPE, no
+    causal mask over the memory."""
+    b, s, d = x.shape
+    q = (x @ p["wq"]).reshape(b, s, n_heads, hd)
+    k = (kv_src @ p["wk"]).reshape(b, kv_src.shape[1], n_kv, hd)
+    v = (kv_src @ p["wv"]).reshape(b, kv_src.shape[1], n_kv, hd)
+    t = k.shape[1]
+    blk = kv_block
+    while t % blk != 0:           # memory tokens may not align to 512
+        blk //= 2
+    out = blockwise_attention(q, k, v, causal=False, kv_block=max(blk, 1))
+    return out.reshape(b, s, n_heads * hd) @ p["wo"]
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+
+def swiglu_mlp(p: dict, x: jax.Array) -> jax.Array:
+    return (jax.nn.silu(x @ p["wg"]) * (x @ p["wu"])) @ p["wd"]
+
+
+def gelu_mlp(p: dict, x: jax.Array) -> jax.Array:
+    h = x @ p["w1"]
+    if "b1" in p:
+        h = h + p["b1"]
+    h = jax.nn.gelu(h)
+    h = h @ p["w2"]
+    if "b2" in p:
+        h = h + p["b2"]
+    return h
+
+
+def mlp_block(p: dict, x: jax.Array, kind: str) -> jax.Array:
+    return swiglu_mlp(p, x) if kind == "swiglu" else gelu_mlp(p, x)

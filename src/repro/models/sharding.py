@@ -1,0 +1,189 @@
+"""Sharding rules for the assigned architectures on the production mesh.
+
+The mesh is ``("data", "model")`` single-pod or ``("pod", "data", "model")``
+multi-pod (harness spec). This is the paper's 4D philosophy mapped onto
+token models: the DP axes (pod x data) replicate the pipeline over
+independent batches exactly like the paper's G_d, and the ``model`` axis
+plays the role of the 3D-PMM tensor grid for the dense algebra
+(DESIGN.md §6 — 3D PMM itself is exercised by the GNN path).
+
+Parameter rules (Megatron-style, chosen so every sharded dim is divisible
+by |model| = 16 for all ten configs — verified by tests):
+
+  embed (Vp, D)            -> P(model, None)       Vp padded to 128x
+  lm_head (D, Vp)          -> P(None, model)
+  attn wq/wk/wv (D, H*hd)  -> P(None, model)       flattened head dim
+  attn wo (H*hd, D)        -> P(model, None)
+  mlp in (D, F)            -> P(None, model); out (F, D) -> P(model, None)
+  MoE experts (E, D, F)    -> P(model, None, None) when E % |model| == 0
+                              (expert parallelism — llama4's 16 experts),
+                              else P(None, None, model) (TP inside experts —
+                              mixtral's 8)
+  mamba in_proj            -> P(None, model); out_proj -> P(model, None)
+  norms / gates / scalars  -> replicated
+
+Activations: tokens and the KV-cache batch dim shard over the DP axes when
+divisible (long_500k has batch 1 -> replicated); everything else is left to
+GSPMD propagation.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Sequence, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models.config import ModelConfig
+
+
+def dp_axes(mesh: Mesh) -> Tuple[str, ...]:
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def model_axis_size(mesh: Mesh) -> int:
+    return mesh.shape.get("model", 1)
+
+
+def _rule_for_path(path: str, leaf, cfg: ModelConfig, tp: int,
+                   fsdp: Optional[Tuple[str, ...]] = None,
+                   fsdp_size: int = 1) -> P:
+    """Map a parameter path (joined key names) to a PartitionSpec.
+
+    ``fsdp`` — the DP axis tuple to additionally shard the *other* large
+    dim over (ZeRO-3 style), required to fit the ~100B configs: with pure
+    TP-16 a 104B bf16 model is 13 GB/chip of parameters alone. GSPMD
+    inserts the just-in-time all-gather inside the layer scan.
+    """
+    ndim = len(leaf.shape)
+    stacked = path.startswith("blocks") or path.startswith("cross_blocks") \
+        or path.startswith("enc_blocks")
+    lead = (None,) if stacked else ()
+    # stacked leaves carry a leading layer dim
+    base_ndim = ndim - len(lead)
+
+    def spec(*axes):
+        assert len(axes) == base_ndim, (path, leaf.shape, axes)
+        return P(*(lead + axes))
+
+    def div(dim_idx_from_base: int) -> bool:
+        return leaf.shape[len(lead) + dim_idx_from_base] % tp == 0
+
+    def fdiv(dim_idx_from_base: int):
+        """The FSDP axes if that dim divides, else None."""
+        if fsdp and leaf.shape[len(lead) + dim_idx_from_base] % fsdp_size \
+                == 0:
+            return fsdp
+        return None
+
+    last = path.rsplit("::", 1)[-1]
+
+    if path == "embed":
+        row = "model" if leaf.shape[0] % tp == 0 else None
+        return P(row, fdiv(1) if row else None)
+    if path == "lm_head":
+        col = "model" if leaf.shape[1] % tp == 0 else None
+        return P(fdiv(0) if col else None, col)
+
+    if last in ("wq", "wk", "wv", "wg", "wu", "w1", "in_proj"):
+        if base_ndim == 3:  # MoE experts (E, D, F)
+            if leaf.shape[len(lead)] % tp == 0:
+                return spec("model", fdiv(1), None)
+            return spec(None, fdiv(1), "model") if div(2) else \
+                spec(None, None, None)
+        if div(1):
+            return spec(fdiv(0), "model")
+        return spec(None, None)
+    if last in ("wo", "wd", "w2", "out_proj"):
+        if base_ndim == 3:  # MoE experts (E, F, D)
+            if leaf.shape[len(lead)] % tp == 0:
+                return spec("model", None, fdiv(2))
+            return spec(None, "model", fdiv(2)) if div(1) else \
+                spec(None, None, None)
+        if div(0):
+            return spec("model", fdiv(1))
+        return spec(None, None)
+    if last in ("bq", "bk", "bv", "b1"):
+        return spec("model") if div(0) else spec(None)
+    if last == "conv_w":
+        return spec("model", None) if div(0) else spec(None, None)
+    if last == "router":
+        return spec(None, None)
+    # norms, biases on d_model, gates, a_log, d_skip, dt_bias, scalars
+    return spec(*([None] * base_ndim))
+
+
+def param_pspecs(cfg: ModelConfig, mesh: Mesh, params_tree: Any,
+                 fsdp: bool = False) -> Any:
+    """PartitionSpec pytree matching ``params_tree`` (real or abstract)."""
+    tp = model_axis_size(mesh)
+    fa = dp_axes(mesh) if fsdp else None
+    fsz = 1
+    if fa:
+        for a in fa:
+            fsz *= mesh.shape[a]
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params_tree)
+    specs = []
+    for path, leaf in flat:
+        key = "::".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                        for p in path)
+        specs.append(_rule_for_path(key, leaf, cfg, tp, fa, fsz))
+    return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+def batch_pspec(mesh: Mesh, batch: int, extra_dims: int = 1) -> P:
+    """Spec for a (batch, ...) array: shard batch over DP axes when
+    divisible, else replicate."""
+    axes = dp_axes(mesh)
+    total = 1
+    for a in axes:
+        total *= mesh.shape[a]
+    if axes and batch % total == 0:
+        first = axes if len(axes) > 1 else axes[0]
+        return P(first, *([None] * extra_dims))
+    return P(*([None] * (1 + extra_dims)))
+
+
+def cache_pspecs(cfg: ModelConfig, mesh: Mesh, cache_tree: Any,
+                 batch: int) -> Any:
+    """Specs for the decode cache: batch dim (index 1 of the stacked
+    (L, B, ...) arrays) over DP; KV-head or head_dim over model when
+    divisible; SSM state heads over model."""
+    tp = model_axis_size(mesh)
+    axes = dp_axes(mesh)
+    total = 1
+    for a in axes:
+        total *= mesh.shape[a]
+    dp = (axes if len(axes) > 1 else axes[0]) if (
+        axes and batch % total == 0) else None
+
+    def rule(path, leaf):
+        key = "::".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                        for p in path)
+        nd = len(leaf.shape)
+        if nd == 0:
+            return P()
+        last = key.rsplit("::", 1)[-1]
+        if last in ("k", "v"):                           # (L, B, T, KV, hd)
+            kvh, hd = leaf.shape[3], leaf.shape[4]
+            if kvh % tp == 0:
+                return P(None, dp, None, "model", None)
+            if hd % tp == 0:
+                return P(None, dp, None, None, "model")
+            return P(None, dp, None, None, None)
+        if key.startswith("ssm"):                        # (L, B, nh, hd, N)
+            nh = leaf.shape[2]
+            return P(None, dp, "model" if nh % tp == 0 else None, None,
+                     None)
+        if key.startswith("conv"):                       # (L, B, K-1, C)
+            c = leaf.shape[3]
+            return P(None, dp, None, "model" if c % tp == 0 else None)
+        return P(*([None] * nd))
+
+    flat, treedef = jax.tree_util.tree_flatten_with_path(cache_tree)
+    return jax.tree_util.tree_unflatten(
+        treedef, [rule(p, l) for p, l in flat])
+
+
+def named(mesh: Mesh, spec_tree: Any):
+    return jax.tree.map(lambda sp: NamedSharding(mesh, sp), spec_tree,
+                        is_leaf=lambda x: isinstance(x, P))

@@ -1,0 +1,241 @@
+"""Mamba2 / SSD (state-space duality) block  [arXiv:2405.21060].
+
+Implements the chunked SSD algorithm: the sequence is split into chunks of
+length Q; within-chunk interactions use the quadratic (attention-like) form
+with the 1-semiseparable decay mask, and chunk-to-chunk interaction passes
+the (heads, head_dim, d_state) recurrent state through a ``lax.scan`` — so
+compute is O(L*Q) and the decode state is O(1) in sequence length, which is
+why the SSM/hybrid architectures run the ``long_500k`` shape.
+
+Shapes follow the Mamba2 reference: d_inner = expand * d_model, heads
+nh = d_inner / head_dim, B/C are per-group (n_groups * d_state). The
+depthwise causal conv (width d_conv) runs over the (x, B, C) channels.
+
+Decode keeps (conv_state, ssm_state) and advances both in O(1).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig, SSMConfig
+
+
+def _segsum(a: jax.Array) -> jax.Array:
+    """Lower-triangular cumulative segment sums: out[..., i, j] =
+    sum_{j < k <= i} a[..., k] for j < i; 0 on the diagonal; -inf above."""
+    q = a.shape[-1]
+    cs = jnp.cumsum(a, axis=-1)
+    diff = cs[..., :, None] - cs[..., None, :]          # sum_(j, i]
+    ii = jnp.arange(q)
+    mask = ii[:, None] >= ii[None, :]
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def ssd_chunked(
+    x: jax.Array,      # (B, S, H, P)   inputs (already conv'd + activated)
+    dt: jax.Array,     # (B, S, H)      softplus'd step sizes
+    a_log: jax.Array,  # (H,)           A = -exp(a_log)
+    b: jax.Array,      # (B, S, G, N)
+    c: jax.Array,      # (B, S, G, N)
+    d_skip: jax.Array,  # (H,)          skip connection
+    chunk: int,
+    init_state: Optional[jax.Array] = None,   # (B, H, P, N)
+) -> Tuple[jax.Array, jax.Array]:
+    """Returns (y (B, S, H, P), final_state (B, H, P, N))."""
+    bsz, s, h, p = x.shape
+    g, n = b.shape[2], b.shape[3]
+    if s % chunk != 0:
+        # pad to a chunk multiple: dt=0 at padded steps makes the decay 1
+        # and the input contribution 0, so the carried state is unchanged
+        pad = chunk - s % chunk
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        b = jnp.pad(b, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        c = jnp.pad(c, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        y_pad, st = ssd_chunked(x, dt, a_log, b, c, d_skip, chunk,
+                                init_state)
+        return y_pad[:, :s], st
+    nc = s // chunk
+    rep = h // g
+
+    f32 = jnp.float32
+    a = -jnp.exp(a_log.astype(f32))                     # (H,) negative
+    da = dt.astype(f32) * a                             # (B, S, H)
+    xdt = x.astype(f32) * dt.astype(f32)[..., None]     # discretized input
+
+    # chunked views
+    da_c = da.reshape(bsz, nc, chunk, h).transpose(0, 3, 1, 2)  # (B,H,nc,Q)
+    x_c = xdt.reshape(bsz, nc, chunk, h, p)
+    b_c = b.astype(f32).reshape(bsz, nc, chunk, g, n)
+    c_c = c.astype(f32).reshape(bsz, nc, chunk, g, n)
+
+    # within-chunk (diagonal blocks): attention-like with decay mask
+    lmask = jnp.exp(_segsum(da_c))                      # (B,H,nc,Q,Q)
+    # scores: C_i . B_j  (grouped)
+    cb = jnp.einsum("bnigx,bnjgx->bgnij", c_c, b_c)     # (B,G,nc,Q,Q)
+    cb = jnp.repeat(cb, rep, axis=1)                    # (B,H,nc,Q,Q)
+    y_diag = jnp.einsum("bhnij,bnjhp->bnihp",
+                        cb * lmask.transpose(0, 1, 2, 3, 4),
+                        x_c)                            # (B,nc,Q,H,P)
+
+    # chunk states: sum_j exp(sum_{k>j} da) B_j x_j
+    cum = jnp.cumsum(da_c, axis=-1)                     # (B,H,nc,Q)
+    decay_to_end = jnp.exp(cum[..., -1:] - cum)         # (B,H,nc,Q)
+    bg = jnp.repeat(b_c, rep, axis=3) if rep > 1 else b_c   # (B,nc,Q,H,N)
+    states = jnp.einsum("bnjhx,bhnj,bnjhp->bnhpx",
+                        bg, decay_to_end, x_c)          # (B,nc,H,P,N)
+
+    # inter-chunk recurrence
+    chunk_decay = jnp.exp(cum[..., -1])                 # (B,H,nc)
+    s0 = (init_state.astype(f32) if init_state is not None
+          else jnp.zeros((bsz, h, p, n), f32))
+
+    def scan_fn(carry, inp):
+        st_in = carry                                   # (B,H,P,N)
+        new_state, cd = inp                             # (B,H,P,N), (B,H)
+        out = st_in                                     # state BEFORE chunk
+        st_out = st_in * cd[..., None, None] + new_state
+        return st_out, out
+
+    states_t = states.transpose(1, 0, 2, 3, 4)          # (nc,B,H,P,N)
+    cd_t = chunk_decay.transpose(2, 0, 1)               # (nc,B,H)
+    final_state, prev_states = jax.lax.scan(
+        scan_fn, s0, (states_t, cd_t))
+    prev_states = prev_states.transpose(1, 0, 2, 3, 4)  # (B,nc,H,P,N)
+
+    # contribution of carried state into each chunk
+    state_decay = jnp.exp(cum)                          # (B,H,nc,Q)
+    cg = jnp.repeat(c_c, rep, axis=3) if rep > 1 else c_c
+    y_off = jnp.einsum("bnihx,bnhpx,bhni->bnihp",
+                       cg, prev_states, state_decay)
+
+    y = (y_diag + y_off).reshape(bsz, s, h, p)
+    y = y + x.astype(f32) * d_skip.astype(f32)[None, None, :, None]
+    return y.astype(x.dtype), final_state
+
+
+def ssd_decode_step(
+    x: jax.Array,      # (B, H, P)  one token (conv'd)
+    dt: jax.Array,     # (B, H)
+    a_log: jax.Array,  # (H,)
+    b: jax.Array,      # (B, G, N)
+    c: jax.Array,      # (B, G, N)
+    d_skip: jax.Array,  # (H,)
+    state: jax.Array,  # (B, H, P, N)
+) -> Tuple[jax.Array, jax.Array]:
+    """O(1) recurrent update: s' = exp(dt*A) s + dt * x B^T; y = C . s'."""
+    f32 = jnp.float32
+    h = x.shape[1]
+    g = b.shape[1]
+    rep = h // g
+    a = -jnp.exp(a_log.astype(f32))
+    da = jnp.exp(dt.astype(f32) * a)                    # (B, H)
+    bg = jnp.repeat(b.astype(f32), rep, axis=1)         # (B, H, N)
+    cg = jnp.repeat(c.astype(f32), rep, axis=1)
+    xdt = x.astype(f32) * dt.astype(f32)[..., None]     # (B, H, P)
+    new_state = (state.astype(f32) * da[..., None, None]
+                 + xdt[..., None] * bg[:, :, None, :])  # (B,H,P,N)
+    y = jnp.einsum("bhpn,bhn->bhp", new_state, cg)
+    y = y + x.astype(f32) * d_skip.astype(f32)[None, :, None]
+    return y.astype(x.dtype), new_state.astype(state.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Full Mamba2 block (projections + conv + SSD + gate + out)
+# ---------------------------------------------------------------------------
+
+def _conv1d_causal(x: jax.Array, w: jax.Array) -> jax.Array:
+    """Depthwise causal conv. x: (B, S, C); w: (C, K)."""
+    k = w.shape[-1]
+    pad = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    # sum of shifted slices — K is tiny (4), unrolled adds beat conv lowering
+    out = jnp.zeros_like(x, dtype=jnp.float32)
+    s = x.shape[1]
+    for i in range(k):
+        out = out + pad[:, i:i + s].astype(jnp.float32) \
+            * w[:, i].astype(jnp.float32)
+    return out.astype(x.dtype)
+
+
+def mamba2_split_sizes(cfg: ModelConfig) -> Tuple[int, int, int, int]:
+    s: SSMConfig = cfg.ssm
+    din = s.d_inner(cfg.d_model)
+    gn = s.n_groups * s.d_state
+    nh = s.n_heads(cfg.d_model)
+    return din, gn, nh, s.d_conv
+
+
+def mamba2_block(p: dict, x: jax.Array, cfg: ModelConfig,
+                 init_state=None) -> Tuple[jax.Array, jax.Array]:
+    """Full-sequence Mamba2 block. x: (B, S, D). Returns (y, final_ssm_state).
+
+    Params: in_proj (D, 2*din + 2*gn + nh), conv_w (din + 2*gn, K),
+    a_log (nh,), d_skip (nh,), dt_bias (nh,), norm_scale (din,),
+    out_proj (din, D).
+    """
+    s: SSMConfig = cfg.ssm
+    din, gn, nh, k = mamba2_split_sizes(cfg)
+    hd = s.head_dim
+    bsz, sl, _ = x.shape
+
+    zxbcdt = x @ p["in_proj"]
+    z, xbc, dt = jnp.split(zxbcdt, [din, 2 * din + 2 * gn], axis=-1)
+    xbc = _conv1d_causal(xbc, p["conv_w"])
+    xbc = jax.nn.silu(xbc)
+    xin, b, c = jnp.split(xbc, [din, din + gn], axis=-1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32)
+                         + p["dt_bias"].astype(jnp.float32))
+
+    y, state = ssd_chunked(
+        xin.reshape(bsz, sl, nh, hd), dt,
+        p["a_log"],
+        b.reshape(bsz, sl, s.n_groups, s.d_state),
+        c.reshape(bsz, sl, s.n_groups, s.d_state),
+        p["d_skip"], chunk=min(s.chunk, sl), init_state=init_state)
+
+    y = y.reshape(bsz, sl, din)
+    # gated RMSNorm (mamba2 uses norm(y * silu(z)))
+    y = y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype)
+    from repro.models.layers import rmsnorm
+    y = rmsnorm(y, p["norm_scale"], 1e-5)
+    return y @ p["out_proj"], state
+
+
+def mamba2_decode(p: dict, x: jax.Array, cfg: ModelConfig,
+                  conv_state: jax.Array, ssm_state: jax.Array
+                  ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """One-token Mamba2 step. x: (B, 1, D). conv_state: (B, K-1, C_conv).
+    Returns (y (B, 1, D), conv_state', ssm_state')."""
+    s: SSMConfig = cfg.ssm
+    din, gn, nh, k = mamba2_split_sizes(cfg)
+    hd = s.head_dim
+    bsz = x.shape[0]
+
+    zxbcdt = x[:, 0] @ p["in_proj"]
+    z, xbc, dt = jnp.split(zxbcdt, [din, 2 * din + 2 * gn], axis=-1)
+
+    # conv via stored last K-1 inputs
+    window = jnp.concatenate([conv_state, xbc[:, None, :]], axis=1)  # (B,K,C)
+    conv_out = jnp.einsum("bkc,ck->bc", window.astype(jnp.float32),
+                          p["conv_w"].astype(jnp.float32))
+    xbc = jax.nn.silu(conv_out).astype(x.dtype)
+    new_conv_state = window[:, 1:]
+
+    xin, b, c = jnp.split(xbc, [din, din + gn], axis=-1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32)
+                         + p["dt_bias"].astype(jnp.float32))   # (B, nh)
+
+    y, new_ssm = ssd_decode_step(
+        xin.reshape(bsz, nh, hd), dt, p["a_log"],
+        b.reshape(bsz, s.n_groups, s.d_state),
+        c.reshape(bsz, s.n_groups, s.d_state),
+        p["d_skip"], ssm_state)
+    y = y.reshape(bsz, din)
+    y = y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype)
+    from repro.models.layers import rmsnorm
+    y = rmsnorm(y, p["norm_scale"], 1e-5)
+    return (y @ p["out_proj"])[:, None, :], new_conv_state, new_ssm

@@ -1,0 +1,915 @@
+"""Model assembly for all six assigned-architecture families.
+
+Design notes:
+
+* **Scan over layers.** Homogeneous layer stacks are stored with a leading
+  L dim on every parameter leaf and executed with ``jax.lax.scan`` — this
+  keeps HLO size and compile time O(1) in depth (command-r-plus has 64
+  layers of d_model 12288; unrolling would explode the dry-run).
+  Heterogeneous stacks scan over *super-blocks*: the VLM scans 20 blocks of
+  [cross-attn + 4 self-attn]; zamba2 scans 9 blocks of [shared-attn + 6
+  mamba]; whisper runs two scans (encoder, decoder).
+* **Abstract init.** ``abstract_params`` wraps ``init_params`` in
+  ``jax.eval_shape`` so the 104B-parameter configs produce pure
+  ShapeDtypeStructs — the multi-pod dry-run never allocates.
+* **Three entry points** per the input-shape contract: ``forward_train``
+  (full sequence, loss-ready logits), ``prefill`` (full sequence, returns
+  the filled decode cache), ``decode_step`` (one token against the cache).
+* Vocab is padded to a multiple of 128 (``cfg.vocab_padded``); padded
+  logits are masked to -inf everywhere they feed a softmax/loss.
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models import moe as M
+from repro.models import ssm as SSM
+from repro.models.config import ModelConfig
+
+Params = Dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# Run options (trace-time): activation sharding + rematerialization
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class RunOptions:
+    """Distribution/memory knobs applied while *tracing* the model.
+
+    ``act_sharding`` — a NamedSharding applied to the (B, S, D) hidden
+    states between layers (Megatron-style sequence parallelism when the
+    spec shards S over 'model'); skipped automatically when S doesn't
+    divide. ``remat`` — ``jax.checkpoint`` around every layer-scan body so
+    the backward pass recomputes activations (required to fit the 100B
+    configs' train_4k shape).
+    """
+    act_sharding: Any = None
+    remat: bool = False
+    head_sharding: Any = None   # NamedSharding for the (D, Vp) logits weight
+    # Megatron-style sequence parallelism (§Perf H2.1): between layers the
+    # hidden states are S-sharded over 'model' (act_sharding); INSIDE each
+    # block the matmul input is constrained model-REPLICATED so GSPMD
+    # all-gathers the small activations instead of replicating the big
+    # weights (measured: weight replication costs 13.5 TB/device/step on
+    # command-r-plus train_4k; activation gathers cost ~0.3 TB)
+    inner_act_sharding: Any = None
+
+
+_RUN_OPTS = RunOptions()
+
+
+@contextlib.contextmanager
+def run_options(act_sharding=None, remat: bool = False, head_sharding=None,
+                inner_act_sharding=None):
+    global _RUN_OPTS
+    prev = _RUN_OPTS
+    _RUN_OPTS = RunOptions(act_sharding=act_sharding, remat=remat,
+                           head_sharding=head_sharding,
+                           inner_act_sharding=inner_act_sharding)
+    try:
+        yield
+    finally:
+        _RUN_OPTS = prev
+
+
+def _constrain_inner(h: jax.Array) -> jax.Array:
+    """Model-replicate the block-input activations (see RunOptions)."""
+    sh = _RUN_OPTS.inner_act_sharding
+    if sh is None or h.ndim != 3:
+        return h
+    try:
+        return jax.lax.with_sharding_constraint(h, sh)
+    except Exception:
+        return h
+
+
+def _constrain(h: jax.Array) -> jax.Array:
+    sh = _RUN_OPTS.act_sharding
+    if sh is None or h.ndim != 3:
+        return h
+    # apply only when every sharded dim divides
+    try:
+        spec = sh.spec
+        mesh = sh.mesh
+        for dim, names in enumerate(spec):
+            if names is None:
+                continue
+            names = names if isinstance(names, tuple) else (names,)
+            total = 1
+            for n in names:
+                total *= mesh.shape[n]
+            if h.shape[dim] % total != 0:
+                return h
+        return jax.lax.with_sharding_constraint(h, sh)
+    except Exception:
+        return h
+
+
+def _maybe_remat(fn):
+    if not _RUN_OPTS.remat:
+        return fn
+
+    def wrapped(carry, xs):
+        # the barrier pins the saved (stacked) carry to its trace dtype —
+        # without it XLA may hoist the first f32 upcast of the layer body
+        # out of the while loop and stack the carries in f32, doubling the
+        # dominant training buffer (observed on the 104B configs)
+        carry = jax.lax.optimization_barrier(carry)
+        return fn(carry, xs)
+
+    return jax.checkpoint(wrapped)
+
+
+# ---------------------------------------------------------------------------
+# Initialization
+# ---------------------------------------------------------------------------
+
+def _dense(key, shape, dtype, scale=0.02):
+    return (scale * jax.random.normal(key, shape, jnp.float32)).astype(dtype)
+
+
+def _norm_params(cfg: ModelConfig, d: int):
+    p = {"scale": jnp.ones((d,), cfg.param_dtype)}
+    if cfg.norm == "layernorm":
+        p["bias"] = jnp.zeros((d,), cfg.param_dtype)
+    return p
+
+
+def _attn_params(key, cfg: ModelConfig, stack: Optional[int] = None):
+    d, hq = cfg.d_model, cfg.n_heads * cfg.hd
+    hkv = cfg.n_kv_heads * cfg.hd
+    ks = jax.random.split(key, 4)
+    pre = (stack,) if stack else ()
+    p = {
+        "wq": _dense(ks[0], pre + (d, hq), cfg.param_dtype),
+        "wk": _dense(ks[1], pre + (d, hkv), cfg.param_dtype),
+        "wv": _dense(ks[2], pre + (d, hkv), cfg.param_dtype),
+        "wo": _dense(ks[3], pre + (hq, d), cfg.param_dtype),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros(pre + (hq,), cfg.param_dtype)
+        p["bk"] = jnp.zeros(pre + (hkv,), cfg.param_dtype)
+        p["bv"] = jnp.zeros(pre + (hkv,), cfg.param_dtype)
+    return p
+
+
+def _mlp_params(key, cfg: ModelConfig, stack: Optional[int] = None):
+    d, f = cfg.d_model, cfg.d_ff
+    pre = (stack,) if stack else ()
+    ks = jax.random.split(key, 3)
+    if cfg.mlp == "swiglu":
+        return {"wg": _dense(ks[0], pre + (d, f), cfg.param_dtype),
+                "wu": _dense(ks[1], pre + (d, f), cfg.param_dtype),
+                "wd": _dense(ks[2], pre + (f, d), cfg.param_dtype)}
+    return {"w1": _dense(ks[0], pre + (d, f), cfg.param_dtype),
+            "b1": jnp.zeros(pre + (f,), cfg.param_dtype),
+            "w2": _dense(ks[1], pre + (f, d), cfg.param_dtype),
+            "b2": jnp.zeros(pre + (d,), cfg.param_dtype)}
+
+
+def _moe_params(key, cfg: ModelConfig, stack: int):
+    d, f = cfg.d_model, cfg.d_ff
+    e = cfg.moe.num_experts
+    ks = jax.random.split(key, 5)
+    p = {
+        "router": _dense(ks[0], (stack, d, e), cfg.param_dtype),
+        "wg": _dense(ks[1], (stack, e, d, f), cfg.param_dtype),
+        "wu": _dense(ks[2], (stack, e, d, f), cfg.param_dtype),
+        "wd": _dense(ks[3], (stack, e, f, d), cfg.param_dtype),
+    }
+    if cfg.moe.shared_expert:
+        kk = jax.random.split(ks[4], 3)
+        p["shared"] = {"wg": _dense(kk[0], (stack, d, f), cfg.param_dtype),
+                       "wu": _dense(kk[1], (stack, d, f), cfg.param_dtype),
+                       "wd": _dense(kk[2], (stack, f, d), cfg.param_dtype)}
+    return p
+
+
+def _mamba_params(key, cfg: ModelConfig, stack: int):
+    din, gn, nh, k = SSM.mamba2_split_sizes(cfg)
+    d = cfg.d_model
+    conv_ch = din + 2 * gn
+    ks = jax.random.split(key, 3)
+    return {
+        "in_proj": _dense(ks[0], (stack, d, 2 * din + 2 * gn + nh),
+                          cfg.param_dtype),
+        "conv_w": _dense(ks[1], (stack, conv_ch, k), cfg.param_dtype, 0.2),
+        "a_log": jnp.zeros((stack, nh), jnp.float32),
+        "d_skip": jnp.ones((stack, nh), jnp.float32),
+        "dt_bias": jnp.zeros((stack, nh), jnp.float32),
+        "norm_scale": jnp.ones((stack, din), cfg.param_dtype),
+        "out_proj": _dense(ks[2], (stack, din, d), cfg.param_dtype),
+    }
+
+
+def _stacked_norms(cfg: ModelConfig, stack: int, d: int):
+    p = {"scale": jnp.ones((stack, d), cfg.param_dtype)}
+    if cfg.norm == "layernorm":
+        p["bias"] = jnp.zeros((stack, d), cfg.param_dtype)
+    return p
+
+
+def init_params(key: jax.Array, cfg: ModelConfig) -> Params:
+    d, vp = cfg.d_model, cfg.vocab_padded
+    keys = jax.random.split(key, 12)
+    params: Params = {
+        "embed": _dense(keys[0], (vp, d), cfg.param_dtype),
+        "final_norm": _norm_params(cfg, d),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = _dense(keys[1], (d, vp), cfg.param_dtype)
+
+    fam = cfg.family
+    nl = cfg.n_layers
+    if fam in ("dense", "moe"):
+        blocks = {
+            "attn": _attn_params(keys[2], cfg, nl),
+            "norm1": _stacked_norms(cfg, nl, d),
+            "norm2": _stacked_norms(cfg, nl, d),
+        }
+        if fam == "moe":
+            blocks["moe"] = _moe_params(keys[3], cfg, nl)
+        else:
+            blocks["mlp"] = _mlp_params(keys[3], cfg, nl)
+        params["blocks"] = blocks
+    elif fam == "ssm":
+        params["blocks"] = {
+            "mamba": _mamba_params(keys[2], cfg, nl),
+            "norm": _stacked_norms(cfg, nl, d),
+        }
+    elif fam == "hybrid":
+        params["blocks"] = {
+            "mamba": _mamba_params(keys[2], cfg, nl),
+            "norm": _stacked_norms(cfg, nl, d),
+        }
+        # zamba2's shared block is a full transformer block (attn + MLP)
+        # whose weights are reused at every application
+        params["shared_attn"] = {
+            "attn": _attn_params(keys[3], cfg),
+            "norm": _norm_params(cfg, d),
+            "mlp": _mlp_params(keys[4], cfg),
+            "norm2": _norm_params(cfg, d),
+        }
+    elif fam == "vlm":
+        k = cfg.cross_attn_every
+        n_cross = nl // k
+        n_self = nl - n_cross
+        assert n_self % n_cross == 0
+        params["blocks"] = {
+            "attn": _attn_params(keys[2], cfg, n_self),
+            "mlp": _mlp_params(keys[3], cfg, n_self),
+            "norm1": _stacked_norms(cfg, n_self, d),
+            "norm2": _stacked_norms(cfg, n_self, d),
+        }
+        params["cross_blocks"] = {
+            "attn": _attn_params(keys[4], cfg, n_cross),
+            "mlp": _mlp_params(keys[5], cfg, n_cross),
+            "norm1": _stacked_norms(cfg, n_cross, d),
+            "norm2": _stacked_norms(cfg, n_cross, d),
+            "gate_attn": jnp.zeros((n_cross,), jnp.float32),
+            "gate_mlp": jnp.zeros((n_cross,), jnp.float32),
+        }
+    elif fam == "audio":
+        enc = cfg.encoder
+        params["enc_blocks"] = {
+            "attn": _attn_params(keys[2], cfg, enc.n_layers),
+            "mlp": _mlp_params(keys[3], cfg, enc.n_layers),
+            "norm1": _stacked_norms(cfg, enc.n_layers, d),
+            "norm2": _stacked_norms(cfg, enc.n_layers, d),
+        }
+        params["enc_norm"] = _norm_params(cfg, d)
+        params["blocks"] = {
+            "attn": _attn_params(keys[4], cfg, nl),
+            "cross": _attn_params(keys[5], cfg, nl),
+            "mlp": _mlp_params(keys[6], cfg, nl),
+            "norm1": _stacked_norms(cfg, nl, d),
+            "norm2": _stacked_norms(cfg, nl, d),
+            "norm3": _stacked_norms(cfg, nl, d),
+        }
+    else:
+        raise ValueError(f"unknown family {fam}")
+    return params
+
+
+def abstract_params(cfg: ModelConfig) -> Params:
+    """ShapeDtypeStruct pytree — no allocation (dry-run path)."""
+    return jax.eval_shape(
+        lambda: init_params(jax.random.PRNGKey(0), cfg))
+
+
+# ---------------------------------------------------------------------------
+# Shared block bodies
+# ---------------------------------------------------------------------------
+
+def _norm(x, p, cfg):
+    return L.apply_norm(x, p, cfg.norm, cfg.norm_eps)
+
+
+def _attn_kwargs(cfg: ModelConfig):
+    return dict(n_heads=cfg.n_heads, n_kv=cfg.n_kv_heads, hd=cfg.hd)
+
+
+def _dense_block(p, x, cfg: ModelConfig, positions, *, window,
+                 rope_theta, kv_block=512):
+    h = x + L.attention_block(
+        p["attn"], _constrain_inner(_norm(x, p["norm1"], cfg)),
+        positions=positions, rope_theta=rope_theta, causal=True,
+        window=window, kv_block=kv_block, **_attn_kwargs(cfg))
+    if "moe" in p:
+        y, aux = M.moe_ffn(p["moe"],
+                           _constrain_inner(_norm(h, p["norm2"], cfg)), cfg)
+        return h + y, aux
+    return h + L.mlp_block(
+        p["mlp"], _constrain_inner(_norm(h, p["norm2"], cfg)), cfg.mlp), 0.0
+
+
+def _sinusoidal(positions: jax.Array, d: int) -> jax.Array:
+    half = d // 2
+    freqs = jnp.exp(-jnp.arange(half, dtype=jnp.float32)
+                    * (jnp.log(10000.0) / max(half - 1, 1)))
+    ang = positions[..., None].astype(jnp.float32) * freqs
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# forward_train / prefill shared trunk
+# ---------------------------------------------------------------------------
+
+def _embed(params, tokens, cfg: ModelConfig, positions):
+    h = params["embed"][tokens].astype(cfg.compute_dtype)
+    if cfg.rope_theta is None:          # absolute sinusoidal (whisper)
+        h = h + _sinusoidal(positions, cfg.d_model)[None].astype(h.dtype)
+    return h
+
+
+def _logits(params, h, cfg: ModelConfig):
+    h = _norm(h, params["final_norm"], cfg)
+    w = (params["embed"].T if cfg.tie_embeddings else params["lm_head"])
+    if _RUN_OPTS.head_sharding is not None:
+        # pin the (D, Vp) logits weight layout: without this the tied-
+        # embedding gradient path can trip GSPMD's "involuntary full
+        # rematerialization" and replicate a vocab x d_model f32 buffer
+        w = jax.lax.with_sharding_constraint(w, _RUN_OPTS.head_sharding)
+    logits = h @ w.astype(h.dtype)
+    # mask padded vocabulary ids
+    if cfg.vocab_padded != cfg.vocab:
+        neg = jnp.asarray(-1e30, logits.dtype)
+        logits = jnp.where(
+            jnp.arange(cfg.vocab_padded) < cfg.vocab, logits, neg)
+    return logits
+
+
+def _run_encoder(params, frames, cfg: ModelConfig):
+    """Audio encoder over stubbed frame embeddings (B, F, D)."""
+    h = frames.astype(cfg.compute_dtype)
+    pos = jnp.arange(frames.shape[1])
+    h = h + _sinusoidal(pos, cfg.d_model)[None].astype(h.dtype)
+
+    def body(carry, blk):
+        hh = carry
+        a = L.attention_block(
+            blk["attn"], _norm(hh, blk["norm1"], cfg), positions=pos,
+            rope_theta=None, causal=False, **_attn_kwargs(cfg))
+        hh = hh + a
+        hh = hh + L.mlp_block(blk["mlp"], _norm(hh, blk["norm2"], cfg),
+                              cfg.mlp)
+        return hh, None
+
+    h, _ = jax.lax.scan(body, h, params["enc_blocks"])
+    return _norm(h, params["enc_norm"], cfg)
+
+
+def _trunk(params, h, cfg: ModelConfig, positions, *,
+           memory: Optional[jax.Array] = None) -> Tuple[jax.Array, jax.Array]:
+    """Run the layer stack over full-sequence hidden states.
+    ``memory`` = image embeddings (vlm) or encoder output (audio).
+    Returns (h, aux_loss)."""
+    fam = cfg.family
+    window = cfg.sliding_window
+    theta = cfg.rope_theta
+
+    if fam in ("dense", "moe"):
+        def body(carry, blk):
+            hh, aux = carry
+            hh = _constrain(hh)
+            hh, a = _dense_block(blk, hh, cfg, positions, window=window,
+                                 rope_theta=theta)
+            return (hh, aux + jnp.asarray(a, jnp.float32)), None
+        (h, aux), _ = jax.lax.scan(
+            _maybe_remat(body), (h, jnp.zeros((), jnp.float32)),
+            params["blocks"])
+        return h, aux
+
+    if fam == "ssm":
+        def body(carry, blk):
+            hh = _constrain(carry)
+            y, _ = SSM.mamba2_block(blk["mamba"],
+                                    _norm(hh, blk["norm"], cfg), cfg)
+            return hh + y, None
+        h, _ = jax.lax.scan(_maybe_remat(body), h, params["blocks"])
+        return h, 0.0
+
+    if fam == "hybrid":
+        k = cfg.shared_attn_every
+        nl = cfg.n_layers
+        assert nl % k == 0
+        shared = params["shared_attn"]
+        stacked = jax.tree.map(
+            lambda a: a.reshape((nl // k, k) + a.shape[1:]),
+            params["blocks"])
+
+        def super_body(carry, blks):
+            hh = _constrain(carry)
+            # one shared-weight transformer block application (zamba2)
+            hh = hh + L.attention_block(
+                shared["attn"], _norm(hh, shared["norm"], cfg),
+                positions=positions, rope_theta=theta, causal=True,
+                **_attn_kwargs(cfg))
+            hh = hh + L.mlp_block(shared["mlp"],
+                                  _norm(hh, shared["norm2"], cfg), cfg.mlp)
+
+            def inner(c, blk):
+                y, _ = SSM.mamba2_block(blk["mamba"],
+                                        _norm(c, blk["norm"], cfg), cfg)
+                return c + y, None
+            hh, _ = jax.lax.scan(inner, hh, blks)
+            return hh, None
+
+        h, _ = jax.lax.scan(_maybe_remat(super_body), h, stacked)
+        return h, 0.0
+
+    if fam == "vlm":
+        k = cfg.cross_attn_every
+        n_cross = cfg.n_layers // k
+        per = (cfg.n_layers - n_cross) // n_cross
+        self_stacked = jax.tree.map(
+            lambda a: a.reshape((n_cross, per) + a.shape[1:]),
+            params["blocks"])
+
+        def super_body(carry, blks):
+            hh = _constrain(carry)
+            cb, sb = blks
+            # gated cross-attention to image embeddings
+            ca = L.cross_attention_block(
+                cb["attn"], _norm(hh, cb["norm1"], cfg), memory,
+                **_attn_kwargs(cfg))
+            hh = hh + jnp.tanh(cb["gate_attn"]).astype(hh.dtype) * ca
+            mm = L.mlp_block(cb["mlp"], _norm(hh, cb["norm2"], cfg), cfg.mlp)
+            hh = hh + jnp.tanh(cb["gate_mlp"]).astype(hh.dtype) * mm
+
+            def inner(c, blk):
+                c, _ = _dense_block(blk, c, cfg, positions, window=window,
+                                    rope_theta=theta)
+                return c, None
+            hh, _ = jax.lax.scan(inner, hh, sb)
+            return hh, None
+
+        h, _ = jax.lax.scan(_maybe_remat(super_body), h,
+                            (params["cross_blocks"], self_stacked))
+        return h, 0.0
+
+    if fam == "audio":
+        def body(carry, blk):
+            hh = _constrain(carry)
+            hh = hh + L.attention_block(
+                blk["attn"], _norm(hh, blk["norm1"], cfg),
+                positions=positions, rope_theta=theta, causal=True,
+                **_attn_kwargs(cfg))
+            hh = hh + L.cross_attention_block(
+                blk["cross"], _norm(hh, blk["norm2"], cfg), memory,
+                **_attn_kwargs(cfg))
+            hh = hh + L.mlp_block(blk["mlp"], _norm(hh, blk["norm3"], cfg),
+                                  cfg.mlp)
+            return hh, None
+        h, _ = jax.lax.scan(_maybe_remat(body), h, params["blocks"])
+        return h, 0.0
+
+    raise ValueError(fam)
+
+
+def forward_train(params, tokens, cfg: ModelConfig, *,
+                  memory: Optional[jax.Array] = None
+                  ) -> Tuple[jax.Array, jax.Array]:
+    """tokens (B, S) -> (logits (B, S, Vp), moe_aux_loss)."""
+    b, s = tokens.shape
+    positions = jnp.arange(s)
+    h = _embed(params, tokens, cfg, positions)
+    if cfg.family == "audio":
+        memory = _run_encoder(params, memory, cfg)
+    h, aux = _trunk(params, h, cfg, positions, memory=memory)
+    return _logits(params, h, cfg), aux
+
+
+def lm_loss(logits: jax.Array, targets: jax.Array,
+            vocab: int) -> jax.Array:
+    logz = jax.nn.logsumexp(logits.astype(jnp.float32), axis=-1)
+    tgt = jnp.take_along_axis(
+        logits.astype(jnp.float32), targets[..., None], axis=-1)[..., 0]
+    return jnp.mean(logz - tgt)
+
+
+# ---------------------------------------------------------------------------
+# KV cache: init / prefill / decode
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int) -> Dict[str, Any]:
+    """Family-aware decode state. ``max_len`` is the *sequence* horizon; SWA
+    models allocate only their window (ring buffer)."""
+    dt = cfg.compute_dtype
+    t = cfg.kv_cache_len(max_len)
+    kvh, hd = cfg.n_kv_heads, cfg.hd
+    cache: Dict[str, Any] = {"pos": jnp.zeros((), jnp.int32)}
+    fam = cfg.family
+
+    def kv(lay, length):
+        return {"k": jnp.zeros((lay, batch, length, kvh, hd), dt),
+                "v": jnp.zeros((lay, batch, length, kvh, hd), dt)}
+
+    if fam in ("dense", "moe", "vlm"):
+        n_self = cfg.n_layers
+        if fam == "vlm":
+            n_cross = cfg.n_layers // cfg.cross_attn_every
+            n_self = cfg.n_layers - n_cross
+            cache["cross_kv"] = kv(n_cross, max(cfg.n_image_tokens, 1))
+        cache["self_kv"] = kv(n_self, t)
+    elif fam == "audio":
+        cache["self_kv"] = kv(cfg.n_layers, t)
+        cache["cross_kv"] = kv(cfg.n_layers, cfg.encoder.n_frames)
+    elif fam in ("ssm", "hybrid"):
+        din, gn, nh, k = SSM.mamba2_split_sizes(cfg)
+        s = cfg.ssm
+        cache["conv"] = jnp.zeros(
+            (cfg.n_layers, batch, k - 1, din + 2 * gn), dt)
+        cache["ssm"] = jnp.zeros(
+            (cfg.n_layers, batch, nh, s.head_dim, s.d_state), jnp.float32)
+        if fam == "hybrid":
+            n_app = cfg.n_layers // cfg.shared_attn_every
+            cache["shared_kv"] = kv(n_app, t)
+    return cache
+
+
+def _cache_insert(kv_layer, k_new, v_new, pos, window: Optional[int]):
+    """Write (B, S, KV, hd) new keys/values at ``pos`` (ring if window)."""
+    t = kv_layer["k"].shape[1]
+    s = k_new.shape[1]
+    if window is not None:
+        idx = (pos + jnp.arange(s)) % t
+        kc = kv_layer["k"].at[:, idx].set(k_new)
+        vc = kv_layer["v"].at[:, idx].set(v_new)
+    else:
+        kc = jax.lax.dynamic_update_slice(
+            kv_layer["k"], k_new, (0, pos, 0, 0))
+        vc = jax.lax.dynamic_update_slice(
+            kv_layer["v"], v_new, (0, pos, 0, 0))
+    return {"k": kc, "v": vc}
+
+
+def _attn_decode_with_cache(p, x, kv_layer, pos, cfg: ModelConfig,
+                            rope_theta) -> Tuple[jax.Array, Dict]:
+    """One-token attention; returns (out, updated layer cache)."""
+    b = x.shape[0]
+    q, k, v = L.attn_project_qkv(p, x, cfg.n_heads, cfg.n_kv_heads, cfg.hd)
+    if rope_theta is not None:
+        posv = jnp.full((b, 1), pos)
+        q = L.rope(q, posv, rope_theta)
+        k = L.rope(k, posv, rope_theta)
+    newkv = _cache_insert(kv_layer, k, v, pos, cfg.sliding_window)
+    out = L.decode_attention(q, newkv["k"], newkv["v"], pos + 1,
+                             ring=cfg.sliding_window is not None)
+    return out.reshape(b, 1, cfg.n_heads * cfg.hd) @ p["wo"], newkv
+
+
+def _cross_decode(p, x, kv_layer, cfg: ModelConfig, n_mem) -> jax.Array:
+    b = x.shape[0]
+    q = (x @ p["wq"]).reshape(b, 1, cfg.n_heads, cfg.hd)
+    out = L.decode_attention(q, kv_layer["k"], kv_layer["v"],
+                             jnp.asarray(n_mem, jnp.int32))
+    return out.reshape(b, 1, cfg.n_heads * cfg.hd) @ p["wo"]
+
+
+def prefill(params, tokens, cfg: ModelConfig, max_len: int, *,
+            memory: Optional[jax.Array] = None):
+    """Process the prompt, build the decode cache, return last-pos logits.
+
+    For simplicity and robustness across families, prefill = the full-seq
+    trunk (exactly the train forward, minus loss) + cache construction from
+    the per-layer K/V projections; SSM/hybrid carry their final states.
+    """
+    b, s = tokens.shape
+    cache = init_cache(cfg, b, max_len)
+    positions = jnp.arange(s)
+    h = _embed(params, tokens, cfg, positions)
+    fam = cfg.family
+    theta = cfg.rope_theta
+    window = cfg.sliding_window
+
+    if fam == "audio":
+        memory = _run_encoder(params, memory, cfg)
+
+    def project_kv(attn_p, hh):
+        _, k, v = L.attn_project_qkv(attn_p, hh, cfg.n_heads,
+                                     cfg.n_kv_heads, cfg.hd)
+        if theta is not None:
+            k = L.rope(k, positions, theta)
+        return k, v
+
+    aux = 0.0
+    if fam in ("dense", "moe"):
+        def body(carry, blk):
+            hh, kv_prev = carry
+            xn = _norm(hh, blk["norm1"], cfg)
+            k, v = project_kv(blk["attn"], xn)
+            hh, a = _dense_block(blk, hh, cfg, positions, window=window,
+                                 rope_theta=theta)
+            return (hh, None), (k, v)
+        (h, _), (ks, vs) = jax.lax.scan(body, (h, None), params["blocks"])
+        cache["self_kv"] = _bulk_insert(cache["self_kv"], ks, vs, window)
+
+    elif fam == "ssm":
+        def body(carry, blk):
+            hh = carry
+            xn = _norm(hh, blk["norm"], cfg)
+            y, st = SSM.mamba2_block(blk["mamba"], xn, cfg)
+            conv_tail = _conv_tail(xn, blk["mamba"], cfg)
+            return hh + y, (st, conv_tail)
+        h, (states, convs) = jax.lax.scan(body, h, params["blocks"])
+        cache["ssm"] = states
+        cache["conv"] = convs
+
+    elif fam == "hybrid":
+        k_every = cfg.shared_attn_every
+        nl = cfg.n_layers
+        shared = params["shared_attn"]
+        stacked = jax.tree.map(
+            lambda a: a.reshape((nl // k_every, k_every) + a.shape[1:]),
+            params["blocks"])
+
+        def super_body(carry, blks):
+            hh = carry
+            xn = _norm(hh, shared["norm"], cfg)
+            sk, sv = project_kv(shared["attn"], xn)
+            hh = hh + L.attention_block(
+                shared["attn"], xn, positions=positions, rope_theta=theta,
+                causal=True, **_attn_kwargs(cfg))
+            hh = hh + L.mlp_block(shared["mlp"],
+                                  _norm(hh, shared["norm2"], cfg), cfg.mlp)
+
+            def inner(c, blk):
+                cn = _norm(c, blk["norm"], cfg)
+                y, st = SSM.mamba2_block(blk["mamba"], cn, cfg)
+                return c + y, (st, _conv_tail(cn, blk["mamba"], cfg))
+            hh, inner_out = jax.lax.scan(inner, hh, blks)
+            return hh, ((sk, sv), inner_out)
+
+        h, ((sks, svs), (states, convs)) = jax.lax.scan(
+            super_body, h, stacked)
+        cache["shared_kv"] = _bulk_insert(cache["shared_kv"], sks, svs, None)
+        cache["ssm"] = states.reshape((nl,) + states.shape[2:])
+        cache["conv"] = convs.reshape((nl,) + convs.shape[2:])
+
+    elif fam == "vlm":
+        k_every = cfg.cross_attn_every
+        n_cross = cfg.n_layers // k_every
+        per = (cfg.n_layers - n_cross) // n_cross
+        self_stacked = jax.tree.map(
+            lambda a: a.reshape((n_cross, per) + a.shape[1:]),
+            params["blocks"])
+
+        def super_body(carry, blks):
+            hh = carry
+            cb, sb = blks
+            xq = _norm(hh, cb["norm1"], cfg)
+            ck = (memory @ cb["attn"]["wk"]).reshape(
+                b, memory.shape[1], cfg.n_kv_heads, cfg.hd)
+            cv = (memory @ cb["attn"]["wv"]).reshape(
+                b, memory.shape[1], cfg.n_kv_heads, cfg.hd)
+            ca = L.cross_attention_block(cb["attn"], xq, memory,
+                                         **_attn_kwargs(cfg))
+            hh = hh + jnp.tanh(cb["gate_attn"]).astype(hh.dtype) * ca
+            mm = L.mlp_block(cb["mlp"], _norm(hh, cb["norm2"], cfg), cfg.mlp)
+            hh = hh + jnp.tanh(cb["gate_mlp"]).astype(hh.dtype) * mm
+
+            def inner(c, blk):
+                xn = _norm(c, blk["norm1"], cfg)
+                kk, vv = project_kv(blk["attn"], xn)
+                c, _ = _dense_block(blk, c, cfg, positions, window=window,
+                                    rope_theta=theta)
+                return c, (kk, vv)
+            hh, (ks, vs) = jax.lax.scan(inner, hh, sb)
+            return hh, ((ck, cv), (ks, vs))
+
+        h, ((cks, cvs), (ks, vs)) = jax.lax.scan(
+            super_body, h, (params["cross_blocks"], self_stacked))
+        cache["cross_kv"] = {"k": cks, "v": cvs}
+        n_self = cfg.n_layers - n_cross
+        ks = ks.reshape((n_self,) + ks.shape[2:])
+        vs = vs.reshape((n_self,) + vs.shape[2:])
+        cache["self_kv"] = _bulk_insert(cache["self_kv"], ks, vs, window)
+
+    elif fam == "audio":
+        def body(carry, blk):
+            hh = carry
+            xn = _norm(hh, blk["norm1"], cfg)
+            kk, vv = project_kv(blk["attn"], xn)
+            hh = hh + L.attention_block(
+                blk["attn"], xn, positions=positions, rope_theta=theta,
+                causal=True, **_attn_kwargs(cfg))
+            ck = (memory @ blk["cross"]["wk"]).reshape(
+                b, memory.shape[1], cfg.n_kv_heads, cfg.hd)
+            cv = (memory @ blk["cross"]["wv"]).reshape(
+                b, memory.shape[1], cfg.n_kv_heads, cfg.hd)
+            hh = hh + L.cross_attention_block(
+                blk["cross"], _norm(hh, blk["norm2"], cfg), memory,
+                **_attn_kwargs(cfg))
+            hh = hh + L.mlp_block(blk["mlp"], _norm(hh, blk["norm3"], cfg),
+                                  cfg.mlp)
+            return hh, ((kk, vv), (ck, cv))
+        h, ((ks, vs), (cks, cvs)) = jax.lax.scan(body, h, params["blocks"])
+        cache["self_kv"] = _bulk_insert(cache["self_kv"], ks, vs, None)
+        cache["cross_kv"] = {"k": cks, "v": cvs}
+
+    cache["pos"] = jnp.asarray(s, jnp.int32)
+    logits = _logits(params, h[:, -1:], cfg)
+    del aux
+    return logits, cache
+
+
+def _bulk_insert(kv_cache, ks, vs, window):
+    """Insert (L, B, S, KV, hd) prefill keys into the (L, B, T, ...) cache."""
+    t = kv_cache["k"].shape[2]
+    s = ks.shape[2]
+    if window is not None and s > t:
+        # ring: keep the last `t` positions at their ring slots
+        keep_k = ks[:, :, s - t:]
+        keep_v = vs[:, :, s - t:]
+        idx = (jnp.arange(s - t, s)) % t
+        order = jnp.argsort(idx)
+        return {"k": keep_k[:, :, order], "v": keep_v[:, :, order]}
+    return {"k": jax.lax.dynamic_update_slice(
+                kv_cache["k"], ks.astype(kv_cache["k"].dtype),
+                (0, 0, 0, 0, 0)),
+            "v": jax.lax.dynamic_update_slice(
+                kv_cache["v"], vs.astype(kv_cache["v"].dtype),
+                (0, 0, 0, 0, 0))}
+
+
+def decode_step(params, token, cache, cfg: ModelConfig
+                ) -> Tuple[jax.Array, Dict[str, Any]]:
+    """token (B, 1) + cache -> (logits (B, 1, Vp), cache')."""
+    b = token.shape[0]
+    pos = cache["pos"]
+    positions = jnp.full((b, 1), pos)
+    h = params["embed"][token].astype(cfg.compute_dtype)
+    if cfg.rope_theta is None:
+        h = h + _sinusoidal(positions, cfg.d_model).astype(h.dtype)
+    fam = cfg.family
+    theta = cfg.rope_theta
+
+    if fam in ("dense", "moe"):
+        def body(carry, xs):
+            hh = carry
+            blk, kv_layer = xs
+            a, newkv = _attn_decode_with_cache(
+                blk["attn"], _norm(hh, blk["norm1"], cfg), kv_layer, pos,
+                cfg, theta)
+            hh = hh + a
+            if "moe" in blk:
+                y, _ = M.moe_ffn(blk["moe"], _norm(hh, blk["norm2"], cfg),
+                                 cfg)
+            else:
+                y = L.mlp_block(blk["mlp"], _norm(hh, blk["norm2"], cfg),
+                                cfg.mlp)
+            return hh + y, newkv
+        h, newkv = jax.lax.scan(body, h,
+                                (params["blocks"], cache["self_kv"]))
+        cache = dict(cache, self_kv=newkv)
+
+    elif fam == "ssm":
+        def body(carry, xs):
+            hh = carry
+            blk, conv_st, ssm_st = xs
+            y, c2, s2 = SSM.mamba2_decode(
+                blk["mamba"], _norm(hh, blk["norm"], cfg), cfg,
+                conv_st, ssm_st)
+            return hh + y, (c2, s2)
+        h, (convs, ssms) = jax.lax.scan(
+            body, h, (params["blocks"], cache["conv"], cache["ssm"]))
+        cache = dict(cache, conv=convs, ssm=ssms)
+
+    elif fam == "hybrid":
+        k_every = cfg.shared_attn_every
+        nl = cfg.n_layers
+        shared = params["shared_attn"]
+        stacked = jax.tree.map(
+            lambda a: a.reshape((nl // k_every, k_every) + a.shape[1:]),
+            params["blocks"])
+        conv_st = cache["conv"].reshape(
+            (nl // k_every, k_every) + cache["conv"].shape[1:])
+        ssm_st = cache["ssm"].reshape(
+            (nl // k_every, k_every) + cache["ssm"].shape[1:])
+
+        def super_body(carry, xs):
+            hh = carry
+            blks, cs, ss, kv_layer = xs
+            a, newkv = _attn_decode_with_cache(
+                shared["attn"], _norm(hh, shared["norm"], cfg), kv_layer,
+                pos, cfg, theta)
+            hh = hh + a
+            hh = hh + L.mlp_block(shared["mlp"],
+                                  _norm(hh, shared["norm2"], cfg), cfg.mlp)
+
+            def inner(c, xs2):
+                blk, c_st, s_st = xs2
+                y, c2, s2 = SSM.mamba2_decode(
+                    blk["mamba"], _norm(c, blk["norm"], cfg), cfg,
+                    c_st, s_st)
+                return c + y, (c2, s2)
+            hh, (c2s, s2s) = jax.lax.scan(inner, hh, (blks, cs, ss))
+            return hh, (c2s, s2s, newkv)
+
+        h, (convs, ssms, newkv) = jax.lax.scan(
+            super_body, h, (stacked, conv_st, ssm_st, cache["shared_kv"]))
+        cache = dict(cache,
+                     conv=convs.reshape((nl,) + convs.shape[2:]),
+                     ssm=ssms.reshape((nl,) + ssms.shape[2:]),
+                     shared_kv=newkv)
+
+    elif fam == "vlm":
+        k_every = cfg.cross_attn_every
+        n_cross = cfg.n_layers // k_every
+        per = (cfg.n_layers - n_cross) // n_cross
+        self_stacked = jax.tree.map(
+            lambda a: a.reshape((n_cross, per) + a.shape[1:]),
+            params["blocks"])
+        self_kv = jax.tree.map(
+            lambda a: a.reshape((n_cross, per) + a.shape[1:]),
+            cache["self_kv"])
+
+        def super_body(carry, xs):
+            hh = carry
+            cb, sb, ckv, skv = xs
+            ca = _cross_decode(cb["attn"], _norm(hh, cb["norm1"], cfg),
+                               ckv, cfg, cfg.n_image_tokens)
+            hh = hh + jnp.tanh(cb["gate_attn"]).astype(hh.dtype) * ca
+            mm = L.mlp_block(cb["mlp"], _norm(hh, cb["norm2"], cfg), cfg.mlp)
+            hh = hh + jnp.tanh(cb["gate_mlp"]).astype(hh.dtype) * mm
+
+            def inner(c, xs2):
+                blk, kvl = xs2
+                a, newkv = _attn_decode_with_cache(
+                    blk["attn"], _norm(c, blk["norm1"], cfg), kvl, pos,
+                    cfg, theta)
+                c = c + a
+                c = c + L.mlp_block(blk["mlp"], _norm(c, blk["norm2"], cfg),
+                                    cfg.mlp)
+                return c, newkv
+            hh, newskv = jax.lax.scan(inner, hh, (sb, skv))
+            return hh, newskv
+
+        h, newskv = jax.lax.scan(
+            super_body, h,
+            (params["cross_blocks"], self_stacked, cache["cross_kv"],
+             self_kv))
+        n_self = cfg.n_layers - n_cross
+        cache = dict(cache, self_kv=jax.tree.map(
+            lambda a: a.reshape((n_self,) + a.shape[2:]), newskv))
+
+    elif fam == "audio":
+        def body(carry, xs):
+            hh = carry
+            blk, kvl, ckv = xs
+            a, newkv = _attn_decode_with_cache(
+                blk["attn"], _norm(hh, blk["norm1"], cfg), kvl, pos, cfg,
+                theta)
+            hh = hh + a
+            hh = hh + _cross_decode(blk["cross"],
+                                    _norm(hh, blk["norm2"], cfg), ckv, cfg,
+                                    cfg.encoder.n_frames)
+            hh = hh + L.mlp_block(blk["mlp"], _norm(hh, blk["norm3"], cfg),
+                                  cfg.mlp)
+            return hh, newkv
+        h, newkv = jax.lax.scan(
+            body, h, (params["blocks"], cache["self_kv"],
+                      cache["cross_kv"]))
+        cache = dict(cache, self_kv=newkv)
+
+    logits = _logits(params, h, cfg)
+    cache = dict(cache, pos=pos + 1)
+    return logits, cache
+
+
+def _conv_tail(xn, mamba_p, cfg: ModelConfig):
+    """The last (d_conv - 1) pre-activation conv inputs — carried into the
+    decode conv state at prefill handoff."""
+    din, gn, nh, k = SSM.mamba2_split_sizes(cfg)
+    zxbcdt = xn @ mamba_p["in_proj"]
+    xbc = zxbcdt[..., din:din + din + 2 * gn]
+    return xbc[:, -(k - 1):, :]

@@ -1,0 +1,6 @@
+from repro.optim.adamw import AdamW, Sgd, clip_by_global_norm
+from repro.optim.schedules import (constant_schedule, cosine_schedule,
+                                   linear_warmup_cosine)
+
+__all__ = ["AdamW", "Sgd", "clip_by_global_norm", "constant_schedule",
+           "cosine_schedule", "linear_warmup_cosine"]

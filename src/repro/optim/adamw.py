@@ -1,0 +1,95 @@
+"""Optimizers in pure JAX (no optax in this container).
+
+Stateless-object API: ``opt.init(params) -> state``;
+``opt.update(params, grads, state) -> (new_params, new_state)``.
+All ops are elementwise, so under pjit the optimizer states inherit the
+parameter shardings automatically — exactly what the 4D plan needs (the
+paper's optimizer runs on the sharded weights after the DP all-reduce).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Schedule = Callable[[jax.Array], jax.Array]
+
+
+def _to_schedule(lr) -> Schedule:
+    if callable(lr):
+        return lr
+    return lambda step: jnp.asarray(lr, jnp.float32)
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    leaves = jax.tree.leaves(grads)
+    gnorm = jnp.sqrt(sum(jnp.sum(jnp.square(g)) for g in leaves))
+    scale = jnp.minimum(1.0, max_norm / (gnorm + 1e-9))
+    return jax.tree.map(lambda g: g * scale, grads), gnorm
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamW:
+    lr: Any = 1e-3
+    b1: float = 0.9
+    b2: float = 0.999
+    eps: float = 1e-8
+    weight_decay: float = 0.0
+    grad_clip: float = 0.0
+
+    def init(self, params):
+        zeros = lambda p: jnp.zeros_like(p)
+        return {
+            "step": jnp.zeros((), jnp.int32),
+            "mu": jax.tree.map(zeros, params),
+            "nu": jax.tree.map(zeros, params),
+        }
+
+    def update(self, params, grads, state) -> Tuple[Any, Any]:
+        sched = _to_schedule(self.lr)
+        step = state["step"] + 1
+        if self.grad_clip > 0:
+            grads, _ = clip_by_global_norm(grads, self.grad_clip)
+        lr = sched(step)
+        b1, b2 = self.b1, self.b2
+        mu = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g,
+                          state["mu"], grads)
+        nu = jax.tree.map(lambda v, g: b2 * v + (1 - b2) * jnp.square(g),
+                          state["nu"], grads)
+        bc1 = 1 - b1 ** step.astype(jnp.float32)
+        bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+        def upd(p, m, v):
+            mhat = m / bc1
+            vhat = v / bc2
+            return p - lr * (mhat / (jnp.sqrt(vhat) + self.eps)
+                             + self.weight_decay * p)
+
+        new_params = jax.tree.map(upd, params, mu, nu)
+        return new_params, {"step": step, "mu": mu, "nu": nu}
+
+
+@dataclasses.dataclass(frozen=True)
+class Sgd:
+    lr: Any = 1e-2
+    momentum: float = 0.0
+
+    def init(self, params):
+        if self.momentum == 0.0:
+            return {"step": jnp.zeros((), jnp.int32)}
+        return {"step": jnp.zeros((), jnp.int32),
+                "vel": jax.tree.map(jnp.zeros_like, params)}
+
+    def update(self, params, grads, state):
+        sched = _to_schedule(self.lr)
+        step = state["step"] + 1
+        lr = sched(step)
+        if self.momentum == 0.0:
+            new_params = jax.tree.map(lambda p, g: p - lr * g, params, grads)
+            return new_params, {"step": step}
+        vel = jax.tree.map(lambda v, g: self.momentum * v + g,
+                           state["vel"], grads)
+        new_params = jax.tree.map(lambda p, v: p - lr * v, params, vel)
+        return new_params, {"step": step, "vel": vel}

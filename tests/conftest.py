@@ -1,0 +1,17 @@
+"""Shared fixtures. NOTE: no XLA_FLAGS here — unit tests and smoke tests
+run on the single real CPU device; multi-device integration tests spawn
+subprocesses with their own flags (see test_fourd_multidevice.py)."""
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def small_dataset():
+    from repro.graphs import make_synthetic_dataset
+    return make_synthetic_dataset(n=512, num_classes=4, d_in=16,
+                                  avg_degree=8, seed=0)
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)

@@ -1,0 +1,65 @@
+"""Dry-run machinery tests: input specs, applicability policy, and one
+real lower+compile in a 512-device subprocess (slow)."""
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import pytest
+
+from repro.configs import ARCH_IDS, INPUT_SHAPES, get_config
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def test_input_specs_cover_every_shape():
+    # import WITHOUT triggering the XLA_FLAGS side effect in this process:
+    # the env line only matters pre-jax-init, and jax is already up
+    from repro.launch import dryrun as DR
+    for arch in ("tinyllama-1.1b", "whisper-base", "mamba2-780m",
+                 "llama-3.2-vision-90b"):
+        cfg = get_config(arch)
+        for shape in INPUT_SHAPES.values():
+            specs = DR.input_specs(cfg, shape)
+            if shape.kind == "train":
+                assert specs["tokens"].shape == (shape.global_batch,
+                                                 shape.seq_len)
+            elif shape.kind == "prefill":
+                assert "tokens" in specs
+            else:
+                assert specs["token"].shape == (shape.global_batch, 1)
+                assert "cache" in specs
+                leaves = jax.tree.leaves(specs["cache"])
+                assert all(isinstance(l, jax.ShapeDtypeStruct)
+                           for l in leaves)
+            if cfg.family in ("vlm", "audio") and shape.kind != "decode":
+                assert "memory" in specs
+
+
+def test_decode_cache_is_bounded_for_swa():
+    from repro.launch import dryrun as DR
+    cfg = get_config("mixtral-8x7b")
+    specs = DR.input_specs(cfg, INPUT_SHAPES["long_500k"])
+    k = specs["cache"]["self_kv"]["k"]
+    assert k.shape[2] == 4096, "SWA ring cache must be window-sized"
+
+
+@pytest.mark.slow
+def test_dryrun_one_combination_compiles():
+    code = textwrap.dedent("""
+        from repro.launch import dryrun as DR
+        rec = DR.run_one("tinyllama-1.1b", "decode_32k", multi_pod=False,
+                         save=False)
+        assert rec["status"] == "ok", rec.get("error")
+        assert rec["n_devices"] == 256
+        assert rec["loop_aware"]["flops"] > 0
+        print("PASS")
+    """)
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    env.pop("XLA_FLAGS", None)   # dryrun sets its own 512-device flag
+    r = subprocess.run([sys.executable, "-c", code], env=env,
+                       capture_output=True, text=True, timeout=600)
+    assert r.returncode == 0, r.stderr[-2000:]
+    assert "PASS" in r.stdout

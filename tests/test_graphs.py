@@ -1,0 +1,89 @@
+import numpy as np
+import pytest
+
+from repro.graphs import (CSRMatrix, add_self_loops, build_partitioned_graph,
+                          coo_to_csr, csr_to_dense, csr_transpose,
+                          get_dataset, make_synthetic_dataset, sym_normalize)
+from repro.graphs.csr import make_undirected
+
+
+def test_coo_to_csr_roundtrip(rng):
+    n = 64
+    rows = rng.integers(0, n, 200)
+    cols = rng.integers(0, n, 200)
+    vals = rng.normal(size=200).astype(np.float32)
+    A = coo_to_csr(rows, cols, vals, (n, n))
+    A.validate()
+    D = csr_to_dense(A)
+    ref = np.zeros((n, n), np.float32)
+    np.add.at(ref, (rows, cols), vals)
+    assert np.allclose(D, ref, atol=1e-5)
+
+
+def test_transpose(rng):
+    n = 32
+    rows = rng.integers(0, n, 100)
+    cols = rng.integers(0, n, 100)
+    A = coo_to_csr(rows, cols, np.ones(100, np.float32), (n, n))
+    At = csr_transpose(A)
+    assert np.allclose(csr_to_dense(At), csr_to_dense(A).T)
+
+
+def test_self_loops_and_normalization():
+    rows = np.array([0, 1, 2])
+    cols = np.array([1, 2, 0])
+    r, c = make_undirected(rows, cols, 3)
+    A = coo_to_csr(r, c, np.ones(len(r), np.float32), (3, 3))
+    A_hat = sym_normalize(add_self_loops(A))
+    D = csr_to_dense(A_hat)
+    assert np.allclose(D, D.T, atol=1e-6)
+    # rows of D^{-1/2} Â D^{-1/2} for a 3-cycle with self loops: all 1/3
+    assert np.allclose(D.sum(1), 1.0, atol=1e-5)
+
+
+def test_sbm_dataset_properties():
+    ds = make_synthetic_dataset(n=1000, num_classes=5, d_in=8,
+                                avg_degree=12, seed=3)
+    assert ds.num_vertices == 1000
+    assert ds.labels.min() >= 0 and ds.labels.max() < 5
+    assert ds.train_mask.sum() + ds.val_mask.sum() + ds.test_mask.sum() \
+        == 1000
+    assert not (ds.train_mask & ds.test_mask).any()
+    deg = ds.adj_norm.row_degrees()
+    assert 4 < deg.mean() < 40   # ~avg_degree + self loop
+
+
+def test_rmat_dataset():
+    ds = make_synthetic_dataset(n=512, num_classes=4, d_in=8, kind="rmat",
+                                avg_degree=8, seed=1)
+    assert ds.num_vertices == 512
+    # power-law: max degree far above mean
+    deg = ds.adj_norm.row_degrees()
+    assert deg.max() > 3 * deg.mean()
+
+
+@pytest.mark.parametrize("g", [2, 4])
+def test_partition_roundtrip(small_dataset, g):
+    pg = build_partitioned_graph(small_dataset, g=g)
+    assert pg.n_pad % g == 0
+    D = csr_to_dense(small_dataset.adj_norm)
+    n_l = pg.n_local
+    R = np.zeros((pg.n_pad, pg.n_pad), np.float32)
+    for i in range(g):
+        for j in range(g):
+            rp, ci, v = pg.block_rp[i, j], pg.block_ci[i, j], \
+                pg.block_val[i, j]
+            for r in range(n_l):
+                s, e = rp[r], rp[r + 1]
+                R[i * n_l + r, j * n_l + ci[s:e]] = v[s:e]
+    n = small_dataset.num_vertices
+    assert np.allclose(R[:n, :n], D, atol=1e-6)
+    # ghosts have no edges
+    assert np.all(R[n:, :] == 0) and np.all(R[:, n:] == 0)
+
+
+def test_dataset_registry():
+    ds = get_dataset("reddit", scale_vertices=256)
+    assert ds.num_vertices == 256
+    with pytest.raises(KeyError):
+        get_dataset("no-such-dataset")

@@ -1,0 +1,167 @@
+"""Per-kernel shape/dtype sweeps vs the pure-jnp oracles (ref.py)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+
+def _random_block_matrix(rng, n_rb, n_cb, bm, bn, density):
+    dense = np.zeros((n_rb * bm, n_cb * bn), np.float32)
+    for i in range(n_rb):
+        for j in range(n_cb):
+            if rng.random() < density:
+                dense[i * bm:(i + 1) * bm, j * bn:(j + 1) * bn] = \
+                    rng.normal(size=(bm, bn))
+    return dense
+
+
+@pytest.mark.parametrize("bm,bn,n_rb,n_cb,d", [
+    (8, 8, 4, 4, 16),
+    (16, 32, 2, 4, 64),
+    (32, 16, 4, 2, 8),
+    (8, 128, 2, 2, 128),
+])
+@pytest.mark.parametrize("density", [0.2, 0.7])
+def test_spmm_ell_shapes_sweep(rng, bm, bn, n_rb, n_cb, d, density):
+    dense = _random_block_matrix(rng, n_rb, n_cb, bm, bn, density)
+    adj = jnp.array(dense)
+    nz = (np.abs(dense).reshape(n_rb, bm, n_cb, bn).sum((1, 3)) > 0)
+    n_slots = max(int(nz.sum(1).max()), 1)
+    tiles, colidx = ops.dense_to_block_ell(adj, bm, bn, n_slots)
+    x = jnp.array(rng.normal(size=(n_cb * bn, d)).astype(np.float32))
+    out_k = ops.spmm_ell(tiles, colidx, x)
+    np.testing.assert_allclose(np.array(out_k),
+                               np.array(ref.spmm_ell_ref(tiles, colidx, x)),
+                               atol=1e-4)
+    np.testing.assert_allclose(np.array(out_k), dense @ np.array(x),
+                               atol=1e-3)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_spmm_ell_dtypes(rng, dtype):
+    dense = _random_block_matrix(rng, 2, 2, 16, 16, 0.8)
+    adj = jnp.array(dense)
+    tiles, colidx = ops.dense_to_block_ell(adj, 16, 16, 2)
+    x = jnp.array(rng.normal(size=(32, 32)).astype(np.float32)).astype(dtype)
+    out = ops.spmm_ell(tiles.astype(dtype), colidx, x)
+    assert out.dtype == dtype
+    tol = 1e-3 if dtype == jnp.float32 else 5e-2
+    np.testing.assert_allclose(
+        np.array(out, np.float32), dense @ np.array(x, np.float32),
+        atol=tol, rtol=tol)
+
+
+def test_spmm_ell_gradients(rng):
+    dense = _random_block_matrix(rng, 3, 3, 8, 8, 0.6)
+    adj = jnp.array(dense)
+    tiles, colidx = ops.dense_to_block_ell(adj, 8, 8, 3)
+    x = jnp.array(rng.normal(size=(24, 12)).astype(np.float32))
+    tgt = jnp.array(rng.normal(size=(24, 12)).astype(np.float32))
+    f_kernel = lambda t, xx: jnp.sum(
+        (ops.spmm_ell(t, colidx, xx) - tgt) ** 2)
+    f_dense = lambda t, xx: jnp.sum(
+        (ref.block_ell_to_dense(t, colidx, 24) @ xx - tgt) ** 2)
+    gk = jax.grad(f_kernel, argnums=(0, 1))(tiles, x)
+    gd = jax.grad(f_dense, argnums=(0, 1))(tiles, x)
+    np.testing.assert_allclose(np.array(gk[1]), np.array(gd[1]), atol=1e-3)
+    np.testing.assert_allclose(np.array(gk[0]), np.array(gd[0]), atol=1e-3)
+
+
+def test_block_density(rng):
+    dense = np.zeros((32, 32), np.float32)
+    dense[:8, :8] = 1.0
+    assert float(ops.block_density(jnp.array(dense), 8, 8)) == \
+        pytest.approx(1 / 16)
+
+
+@pytest.mark.parametrize("b,d,tile", [(32, 16, 8), (64, 48, 32),
+                                      (128, 64, 128), (256, 33, 256)])
+@pytest.mark.parametrize("use_rms,use_relu,use_mask,use_res", [
+    (True, True, True, True),
+    (True, False, False, True),
+    (False, True, True, False),
+    (True, True, False, False),
+])
+def test_fused_layer_sweep(rng, b, d, tile, use_rms, use_relu, use_mask,
+                           use_res):
+    x = jnp.array(rng.normal(size=(b, d)).astype(np.float32))
+    sc = jnp.array(rng.normal(size=(d,)).astype(np.float32))
+    mask = jnp.array(rng.random((b, d)) > 0.4) if use_mask else None
+    res = jnp.array(rng.normal(size=(b, d)).astype(np.float32)) \
+        if use_res else None
+    rate = 0.4 if use_mask else 0.0
+    y = ops.fused_layer_tail(x, res, sc, dropout_mask=mask,
+                             dropout_rate=rate, use_rmsnorm=use_rms,
+                             use_relu=use_relu)
+    y_ref = ref.fused_layer_ref(x, sc, mask, res, dropout_rate=rate,
+                                use_rmsnorm=use_rms, use_relu=use_relu)
+    np.testing.assert_allclose(np.array(y), np.array(y_ref), atol=1e-5)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_fused_layer_dtypes(rng, dtype):
+    x = jnp.array(rng.normal(size=(64, 32)).astype(np.float32)).astype(dtype)
+    sc = jnp.ones((32,), dtype)
+    y = ops.fused_layer_tail(x, None, sc)
+    assert y.dtype == dtype
+    y_ref = ref.fused_layer_ref(x, sc, None, None)
+    np.testing.assert_allclose(np.array(y, np.float32),
+                               np.array(y_ref, np.float32), atol=1e-2)
+
+
+def test_fused_layer_grads(rng):
+    x = jnp.array(rng.normal(size=(32, 24)).astype(np.float32))
+    sc = jnp.array(rng.normal(size=(24,)).astype(np.float32))
+    res = jnp.array(rng.normal(size=(32, 24)).astype(np.float32))
+    mask = jnp.array(rng.random((32, 24)) > 0.25)
+    fk = lambda a, s: jnp.sum(ops.fused_layer_tail(
+        a, res, s, dropout_mask=mask, dropout_rate=0.25) ** 2)
+    fr = lambda a, s: jnp.sum(ref.fused_layer_ref(
+        a, s, mask, res, dropout_rate=0.25) ** 2)
+    gk = jax.grad(fk, argnums=(0, 1))(x, sc)
+    gr = jax.grad(fr, argnums=(0, 1))(x, sc)
+    np.testing.assert_allclose(np.array(gk[0]), np.array(gr[0]), atol=1e-3)
+    np.testing.assert_allclose(np.array(gk[1]), np.array(gr[1]), atol=1e-3)
+
+
+def test_gcn_model_with_kernels(small_dataset):
+    """End-to-end: GCN forward with spmm_impl='ell' and
+    elementwise_impl='pallas' matches the jnp reference path."""
+    import repro.core.gcn_model as M
+    from repro.core import sampling as S
+    A = small_dataset.adj_norm
+    rp, ci, val = (jnp.array(A.indptr), jnp.array(A.indices),
+                   jnp.array(A.data))
+    feats = jnp.array(small_dataset.features)
+    labels = jnp.array(small_dataset.labels)
+    B = 64
+    mb = S.make_minibatch_exact(
+        jax.random.PRNGKey(0), rp, ci, val, feats, labels,
+        small_dataset.num_vertices, B, B * A.max_row_nnz())
+
+    cfg_ref = M.GCNConfig(d_in=16, d_hidden=32, num_layers=2,
+                          num_classes=4, dropout=0.0)
+    params = M.init_params(jax.random.PRNGKey(1), cfg_ref)
+    logits_ref = M.forward(params, mb.adj, mb.feats, cfg_ref, train=False)
+
+    # pallas elementwise path
+    cfg_p = M.GCNConfig(d_in=16, d_hidden=32, num_layers=2, num_classes=4,
+                        dropout=0.0, elementwise_impl="pallas")
+    logits_p = M.forward(params, mb.adj, mb.feats, cfg_p, train=False)
+    np.testing.assert_allclose(np.array(logits_p), np.array(logits_ref),
+                               atol=1e-4)
+
+    # block-ELL spmm path
+    from repro.kernels import ops
+    bm = bn = 8
+    nz = (np.abs(np.array(mb.adj)).reshape(B // bm, bm, B // bn, bn)
+          .sum((1, 3)) > 0)
+    n_slots = max(int(nz.sum(1).max()), 1)
+    adj_ell = ops.dense_to_block_ell(mb.adj, bm, bn, n_slots)
+    cfg_e = M.GCNConfig(d_in=16, d_hidden=32, num_layers=2, num_classes=4,
+                        dropout=0.0, spmm_impl="ell")
+    logits_e = M.forward(params, adj_ell, mb.feats, cfg_e, train=False)
+    np.testing.assert_allclose(np.array(logits_e), np.array(logits_ref),
+                               atol=1e-3)

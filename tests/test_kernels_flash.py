@@ -1,0 +1,61 @@
+"""Flash-attention Pallas kernel: shape/dtype sweeps vs the dense oracle."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+
+@pytest.mark.parametrize("sq,t,h,kv,hd,causal,window", [
+    (64, 64, 4, 2, 32, True, None),
+    (32, 96, 4, 4, 16, False, None),      # cross-attention shape
+    (128, 128, 8, 2, 16, True, 32),       # sliding window
+    (64, 100, 2, 1, 32, False, None),     # KV padding path
+    (256, 256, 2, 2, 64, True, None),     # MHA, multiple q tiles
+])
+def test_flash_kernel_sweep(rng, sq, t, h, kv, hd, causal, window):
+    q = jnp.array(rng.normal(size=(2, sq, h, hd)).astype(np.float32))
+    k = jnp.array(rng.normal(size=(2, t, kv, hd)).astype(np.float32))
+    v = jnp.array(rng.normal(size=(2, t, kv, hd)).astype(np.float32))
+    out = ops.flash_attention(q, k, v, causal, window)
+    expect = ref.flash_attention_ref(q, k, v, causal=causal, window=window)
+    np.testing.assert_allclose(np.array(out), np.array(expect), atol=1e-5)
+
+
+@pytest.mark.parametrize("dtype,tol", [(jnp.float32, 1e-4),
+                                       (jnp.bfloat16, 5e-2)])
+def test_flash_kernel_dtypes(rng, dtype, tol):
+    q = jnp.array(rng.normal(size=(1, 64, 4, 16))).astype(dtype)
+    k = jnp.array(rng.normal(size=(1, 64, 2, 16))).astype(dtype)
+    v = jnp.array(rng.normal(size=(1, 64, 2, 16))).astype(dtype)
+    out = ops.flash_attention(q, k, v, True, None)
+    assert out.dtype == dtype
+    expect = ref.flash_attention_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(np.array(out, np.float32),
+                               np.array(expect, np.float32),
+                               atol=tol, rtol=tol)
+
+
+def test_flash_kernel_gradients(rng):
+    q = jnp.array(rng.normal(size=(2, 64, 4, 16)).astype(np.float32))
+    k = jnp.array(rng.normal(size=(2, 64, 2, 16)).astype(np.float32))
+    v = jnp.array(rng.normal(size=(2, 64, 2, 16)).astype(np.float32))
+    gk = jax.grad(lambda a, b, c: (ops.flash_attention(
+        a, b, c, True, None) ** 2).sum(), argnums=(0, 1, 2))(q, k, v)
+    gr = jax.grad(lambda a, b, c: (ref.flash_attention_ref(
+        a, b, c, causal=True) ** 2).sum(), argnums=(0, 1, 2))(q, k, v)
+    for a, b in zip(gk, gr):
+        np.testing.assert_allclose(np.array(a), np.array(b), atol=1e-3)
+
+
+def test_flash_kernel_matches_layers_blockwise(rng):
+    """The Pallas kernel and the pure-JAX blockwise attention agree —
+    they are two implementations of the same op (DESIGN.md §3)."""
+    from repro.models import layers as L
+    q = jnp.array(rng.normal(size=(2, 128, 4, 32)).astype(np.float32))
+    k = jnp.array(rng.normal(size=(2, 128, 2, 32)).astype(np.float32))
+    v = jnp.array(rng.normal(size=(2, 128, 2, 32)).astype(np.float32))
+    a = ops.flash_attention(q, k, v, True, None)
+    b = L.blockwise_attention(q, k, v, causal=True, kv_block=64)
+    np.testing.assert_allclose(np.array(a), np.array(b), atol=1e-5)

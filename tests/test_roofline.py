@@ -1,0 +1,92 @@
+"""Tests for the loop-aware HLO cost analyzer."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.launch.roofline import (analyze_hlo, model_flops, roofline_terms,
+                                   split_computations)
+
+
+def _hlo(fn, *args):
+    return jax.jit(fn).lower(*args).compile().as_text()
+
+
+def test_single_matmul_flops_exact():
+    a = jnp.zeros((64, 128), jnp.float32)
+    b = jnp.zeros((128, 32), jnp.float32)
+    costs = analyze_hlo(_hlo(lambda x, y: x @ y, a, b))
+    assert costs["flops"] == pytest.approx(2 * 64 * 128 * 32, rel=0.01)
+
+
+def test_scan_trip_count_multiplies_flops():
+    a = jnp.zeros((32, 32), jnp.float32)
+
+    def loop(x):
+        def body(c, _):
+            return c @ a, None
+        out, _ = jax.lax.scan(body, x, None, length=10)
+        return out
+
+    costs = analyze_hlo(_hlo(loop, a))
+    expect = 10 * 2 * 32 * 32 * 32
+    assert costs["flops"] == pytest.approx(expect, rel=0.05)
+
+
+def test_nested_scan_trip_counts():
+    a = jnp.zeros((16, 16), jnp.float32)
+
+    def loop(x):
+        def outer(c, _):
+            def inner(ci, _):
+                return ci @ a, None
+            c2, _ = jax.lax.scan(inner, c, None, length=5)
+            return c2, None
+        out, _ = jax.lax.scan(outer, x, None, length=7)
+        return out
+
+    costs = analyze_hlo(_hlo(loop, a))
+    expect = 7 * 5 * 2 * 16 ** 3
+    assert costs["flops"] == pytest.approx(expect, rel=0.05)
+
+
+def test_roofline_terms_dominance():
+    t = roofline_terms({"flops": 197e12, "bytes": 1.0, "coll_total": 1.0})
+    assert t["dominant"] == "compute"
+    assert t["t_compute_s"] == pytest.approx(1.0)
+    t = roofline_terms({"flops": 1.0, "bytes": 819e9, "coll_total": 1.0})
+    assert t["dominant"] == "memory"
+    t = roofline_terms({"flops": 0.0, "bytes": 0.0, "coll_total": 150e9})
+    assert t["dominant"] == "collective"
+    assert t["t_collective_s"] == pytest.approx(1.0)
+
+
+def test_model_flops_shapes():
+    from repro.configs import INPUT_SHAPES, get_config
+    cfg = get_config("tinyllama-1.1b")
+    tr = model_flops(cfg, INPUT_SHAPES["train_4k"], 256)
+    pf = model_flops(cfg, INPUT_SHAPES["prefill_32k"], 256)
+    dc = model_flops(cfg, INPUT_SHAPES["decode_32k"], 256)
+    assert tr == pytest.approx(6 * 1.1e9 * 256 * 4096 / 256, rel=0.05)
+    assert pf == pytest.approx(2 * 1.1e9 * 32 * 32768 / 256, rel=0.05)
+    assert dc == pytest.approx(2 * 1.1e9 * 128 / 256, rel=0.05)
+    # MoE counts ACTIVE params
+    moe = get_config("mixtral-8x7b")
+    tr_moe = model_flops(moe, INPUT_SHAPES["train_4k"], 256)
+    assert tr_moe < 6 * 46.7e9 * 256 * 4096 / 256 * 0.5
+
+
+def test_split_computations_handles_tuple_params():
+    a = jnp.zeros((8, 8), jnp.float32)
+
+    def loop(x):
+        def body(c, _):
+            h, i = c
+            return (h @ a, i + 1), None
+        (out, _), _ = jax.lax.scan(body, (x, jnp.int32(0)), None, length=3)
+        return out
+
+    comps = split_computations(_hlo(loop, a))
+    assert len(comps) >= 2    # entry + at least the loop body
+    costs = analyze_hlo(_hlo(loop, a))
+    assert costs["flops"] == pytest.approx(3 * 2 * 8 ** 3, rel=0.1)

@@ -1,0 +1,135 @@
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import sampling as S
+from repro.graphs import csr_to_dense
+
+
+@pytest.fixture(scope="module")
+def graph(small_dataset):
+    A = small_dataset.adj_norm
+    return {
+        "rp": jnp.array(A.indptr), "ci": jnp.array(A.indices),
+        "val": jnp.array(A.data),
+        "dense": csr_to_dense(A),
+        "feats": jnp.array(small_dataset.features),
+        "labels": jnp.array(small_dataset.labels),
+        "n": small_dataset.num_vertices,
+        "max_nnz": A.max_row_nnz(),
+    }
+
+
+def test_step_key_deterministic():
+    """Every device derives the identical sample from (seed, step, dp) —
+    the communication-free property."""
+    k1 = S.step_key(7, jnp.asarray(13), 2)
+    k2 = S.step_key(7, jnp.asarray(13), 2)
+    assert jnp.array_equal(k1, k2)
+    assert not jnp.array_equal(k1, S.step_key(7, jnp.asarray(14), 2))
+    assert not jnp.array_equal(k1, S.step_key(7, jnp.asarray(13), 3))
+
+
+def test_sample_uniform_exact_is_sorted_distinct():
+    s = S.sample_uniform_exact(jax.random.PRNGKey(0), 512, 128)
+    sn = np.array(s)
+    assert len(np.unique(sn)) == 128
+    assert np.all(np.diff(sn) > 0)
+
+
+def test_sample_stratified_ranges():
+    cfg = S.SampleConfig(n_pad=512, g=4, batch=64, e_cap=64)
+    s2d = np.array(S.sample_stratified(jax.random.PRNGKey(1), cfg))
+    assert s2d.shape == (4, 16)
+    for i in range(4):
+        assert np.all(s2d[i] >= i * 128) and np.all(s2d[i] < (i + 1) * 128)
+        assert len(np.unique(s2d[i])) == 16
+
+
+def test_exact_extraction_matches_dense(graph):
+    n, B = graph["n"], 96
+    e_cap = B * graph["max_nnz"]
+    mb = S.make_minibatch_exact(
+        jax.random.PRNGKey(2), graph["rp"], graph["ci"], graph["val"],
+        graph["feats"], graph["labels"], n, B, e_cap)
+    s = np.array(mb.vertex_ids)
+    inv_p = (n - 1) / (B - 1)
+    ref = graph["dense"][np.ix_(s, s)] * inv_p
+    np.fill_diagonal(ref, np.diag(graph["dense"][np.ix_(s, s)]))
+    assert np.allclose(np.array(mb.adj), ref, atol=1e-4)
+    assert np.allclose(np.array(mb.feats),
+                       np.array(graph["feats"])[s])
+
+
+def test_e_cap_truncation_drops_not_corrupts(graph):
+    """With a too-small e_cap the extraction must drop edges, never write
+    garbage."""
+    n, B = graph["n"], 96
+    mb_small = S.make_minibatch_exact(
+        jax.random.PRNGKey(2), graph["rp"], graph["ci"], graph["val"],
+        graph["feats"], graph["labels"], n, B, e_cap=B * 2)
+    mb_full = S.make_minibatch_exact(
+        jax.random.PRNGKey(2), graph["rp"], graph["ci"], graph["val"],
+        graph["feats"], graph["labels"], n, B,
+        e_cap=B * graph["max_nnz"])
+    a_small, a_full = np.array(mb_small.adj), np.array(mb_full.adj)
+    mask = a_small != 0
+    assert np.allclose(a_small[mask], a_full[mask], atol=1e-5)
+    assert (a_small != 0).sum() <= (a_full != 0).sum()
+
+
+def test_stratified_matches_dense_with_pairwise_constants(graph):
+    n = graph["n"]
+    cfg = S.SampleConfig(n_pad=n, g=4, batch=64,
+                         e_cap=16 * graph["max_nnz"])
+    mb = S.make_minibatch_stratified(
+        jax.random.PRNGKey(3), graph["rp"], graph["ci"], graph["val"],
+        graph["feats"], graph["labels"], cfg)
+    s = np.array(mb.vertex_ids)
+    inv_same, inv_cross = S.rescale_constants(cfg)
+    ref = graph["dense"][np.ix_(s, s)].copy()
+    nl = cfg.n_local
+    for i in range(64):
+        for j in range(64):
+            if s[i] == s[j]:
+                continue
+            ref[i, j] *= inv_same if s[i] // nl == s[j] // nl else inv_cross
+    assert np.allclose(np.array(mb.adj), ref, atol=1e-4)
+
+
+@pytest.mark.parametrize("mode", ["exact", "stratified"])
+def test_unbiased_aggregation(graph, mode):
+    """Eq. 25: E[sum_u ã_vu x_u | v in S] == full-graph aggregation.
+    Monte-Carlo over many seeds; tolerance scales with trials."""
+    n = graph["n"]
+    B = 128
+    x = np.array(graph["feats"][:, :4])
+    full = graph["dense"] @ x                       # (n, 4)
+    trials = 600
+    acc = np.zeros((n, 4))
+    cnt = np.zeros((n, 1))
+    e_cap = B * graph["max_nnz"]
+
+    if mode == "exact":
+        fn = jax.jit(lambda k: S.make_minibatch_exact(
+            k, graph["rp"], graph["ci"], graph["val"], graph["feats"],
+            graph["labels"], n, B, e_cap))
+    else:
+        cfg = S.SampleConfig(n_pad=n, g=4, batch=B, e_cap=e_cap)
+        fn = jax.jit(lambda k: S.make_minibatch_stratified(
+            k, graph["rp"], graph["ci"], graph["val"], graph["feats"],
+            graph["labels"], cfg))
+
+    for t in range(trials):
+        mb = fn(jax.random.PRNGKey(t))
+        s = np.array(mb.vertex_ids)
+        est = np.array(mb.adj) @ x[s]               # (B, 4)
+        acc[s] += est
+        cnt[s] += 1
+    seen = cnt[:, 0] > trials * B / n * 0.3
+    est_mean = acc[seen] / cnt[seen]
+    # relative error of the Monte-Carlo mean
+    denom = np.abs(full[seen]).mean() + 1e-6
+    rel = np.abs(est_mean - full[seen]).mean() / denom
+    assert rel < 0.15, f"{mode}: aggregation biased, rel err {rel:.3f}"
