@@ -30,6 +30,8 @@ BENCHMARKS = [
      "Fig. 8: epoch-time breakdown vs data-parallel groups"),
     ("benchmarks.kernel_bench", 1,
      "Pallas kernels: block-ELL SpMM + fused tail vs jnp reference"),
+    ("benchmarks.serve_bench", 1,
+     "Serving: p50/p99 latency + req/s — naive vs micro-batched vs +cache"),
     ("benchmarks.ablation_sampling_modes", 1,
      "Ablation: exact vs stratified sampling vs no-rescale control"),
     ("benchmarks.roofline_report", 0,
@@ -41,7 +43,15 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", nargs="*", default=None,
                     help="substring filters on module names")
+    ap.add_argument("--list", action="store_true",
+                    help="print the registered benchmarks and exit")
     args = ap.parse_args()
+
+    if args.list:
+        for module, n_dev, desc in BENCHMARKS:
+            dev = f"{n_dev} dev" if n_dev else "sub-runs"
+            print(f"{module:40s} [{dev:8s}] {desc}")
+        return
 
     repo = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
     all_rows = []

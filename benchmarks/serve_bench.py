@@ -1,0 +1,98 @@
+"""Serving benchmark: p50/p99 latency and req/s for three inference modes —
+naive per-request, micro-batched, and micro-batched + embedding cache — over
+a Zipfian single-vertex request stream on a synthetic graph.
+
+Self-contained so both invocations work:
+
+    PYTHONPATH=src python benchmarks/serve_bench.py --smoke
+    PYTHONPATH=src python -m benchmarks.serve_bench
+
+Emits CSV rows ``name,us_per_request,derived`` for the run.py aggregator.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from repro.core import gcn_model as M
+from repro.graphs import make_synthetic_dataset
+from repro.serve import InferenceEngine, ServeOptions
+
+
+def run_mode(name: str, params, cfg, ds, opts: ServeOptions,
+             stream: np.ndarray) -> dict:
+    eng = InferenceEngine(params, cfg, ds.adj_norm, ds.features, opts)
+    eng.predict([0])                       # jit warmup (one compile total)
+    eng.reset_stats()
+
+    rids = []
+    t0 = time.monotonic()
+    for v in stream:
+        rids.append(eng.submit([int(v)]))
+        eng.pump()
+    eng.drain()
+    for rid in rids:
+        out = eng.poll(rid)
+        assert out is not None, f"request {rid} incomplete"
+    dt = time.monotonic() - t0
+
+    st = eng.stats()
+    rps = len(stream) / dt
+    us_per_req = dt / len(stream) * 1e6
+    derived = (f"p50_ms={st['p50_ms']:.3f};p99_ms={st['p99_ms']:.3f};"
+               f"rps={rps:.0f};device_calls={st['device_calls']}")
+    if "cache" in st:
+        derived += f";hit_rate={st['cache']['hit_rate']:.2f}"
+    print(f"serve_{name},{us_per_req:.1f},{derived}", flush=True)
+    return {"rps": rps, "p50_ms": st["p50_ms"], "p99_ms": st["p99_ms"],
+            "device_calls": st["device_calls"]}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="small sizes; asserts micro >= 2x naive throughput")
+    ap.add_argument("--vertices", type=int, default=None)
+    ap.add_argument("--requests", type=int, default=None)
+    args = ap.parse_args()
+
+    n = args.vertices or (1024 if args.smoke else 4096)
+    n_req = args.requests or (240 if args.smoke else 2000)
+    slots = 32 if args.smoke else 64
+    support = 96 if args.smoke else 192
+
+    ds = make_synthetic_dataset(n=n, num_classes=8, d_in=32,
+                                avg_degree=8, seed=0)
+    cfg = M.GCNConfig(d_in=ds.feature_dim, d_hidden=64, num_layers=2,
+                      num_classes=ds.num_classes, dropout=0.0)
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+
+    rng = np.random.default_rng(7)
+    stream = np.minimum(rng.zipf(1.3, size=n_req), n) - 1
+
+    print(f"# serving {n_req} single-vertex requests, graph n={n}, "
+          f"slots={slots}, support={support} "
+          f"(backend: {jax.default_backend()})", flush=True)
+    common = dict(slots=slots, support=support, max_delay_ms=1.0)
+    naive = run_mode("naive", params, cfg, ds,
+                     ServeOptions(micro_batch=False, **common), stream)
+    micro = run_mode("microbatch", params, cfg, ds,
+                     ServeOptions(micro_batch=True, **common), stream)
+    cached = run_mode("microbatch_cache", params, cfg, ds,
+                      ServeOptions(micro_batch=True, use_cache=True,
+                                   **common), stream)
+
+    speedup = micro["rps"] / naive["rps"]
+    speedup_c = cached["rps"] / naive["rps"]
+    print(f"# micro-batching speedup over naive: {speedup:.1f}x "
+          f"(+cache: {speedup_c:.1f}x)", flush=True)
+    if args.smoke:
+        assert speedup >= 2.0, (
+            f"micro-batched throughput only {speedup:.2f}x naive (need 2x)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,17 +1,24 @@
-"""Low-precision collective communication (ScaleGNN §V-B).
+"""Low-precision numerics: collective communication (ScaleGNN §V-B) and
+row-quantized storage (serving embedding cache).
 
 The paper casts FP32 partial sums to BF16 *only for the 3D-PMM all-reduces*,
 keeping numerically sensitive reductions (parallel RMSNorm, logit reduction
 in parallel cross-entropy) in FP32, and all local compute in FP32. On TPU the
 ICI moves bf16 natively, halving the volume of the dominant collectives —
 identical intent, jax-native mechanism.
+
+The int8 row quantizers below serve `repro/serve/cache.py`: cached per-vertex
+embeddings are stored at 1 byte/element + one FP32 scale per row (symmetric
+absmax quantization), quartering cache memory vs FP32. They are host-side
+(numpy) by design — cache lookups happen outside the jitted apply function.
 """
 from __future__ import annotations
 
-from typing import Union
+from typing import Tuple, Union
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 AxisName = Union[str, tuple]
 
@@ -32,3 +39,26 @@ def psum_fp32(x: jax.Array, axis_name: AxisName) -> jax.Array:
     """Always-FP32 all-reduce for numerically sensitive reductions
     (RMSNorm sum-of-squares, logsumexp terms)."""
     return jax.lax.psum(x, axis_name)
+
+
+# ---------------------------------------------------------------------------
+# Row-quantized storage (serving embedding cache)
+# ---------------------------------------------------------------------------
+
+def quantize_int8(x: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
+    """Symmetric absmax int8 quantization over the last axis.
+
+    Returns ``(q, scale)`` with ``q`` int8 of ``x.shape`` and ``scale``
+    float32 of ``x.shape[:-1] + (1,)`` such that ``q * scale ~= x``.
+    All-zero rows get scale 1.0 (and quantize to zeros).
+    """
+    x = np.asarray(x, np.float32)
+    amax = np.max(np.abs(x), axis=-1, keepdims=True)
+    scale = np.where(amax > 0, amax / 127.0, 1.0).astype(np.float32)
+    q = np.clip(np.rint(x / scale), -127, 127).astype(np.int8)
+    return q, scale
+
+
+def dequantize_int8(q: np.ndarray, scale: np.ndarray) -> np.ndarray:
+    """Inverse of :func:`quantize_int8` (up to rounding error)."""
+    return (q.astype(np.float32) * np.asarray(scale, np.float32))

@@ -151,6 +151,11 @@ def extract_dense_block(
 
     ``e_cap`` must bound the total nnz of the sampled rows; entries beyond it
     are dropped (choose ``e_cap = b_r * max_block_row_nnz`` for exactness).
+
+    ``rescale_offdiag`` is either a scalar (training: one inclusion
+    probability for every sampled column, Eq. 23) or a (b_c,) per-column
+    array (serving: requested vertices are included with probability 1,
+    support vertices with p_support — see ``repro/serve/assembler.py``).
     """
     b_r, b_c = rows_local.shape[0], cols_local.shape[0]
     if ci.shape[0] == 0:                     # empty graph shard
@@ -159,13 +164,15 @@ def extract_dense_block(
         rp, ci, val, rows_local, cols_local, e_cap)
 
     # Phase 4: unbiased rescale (Eq. 24) and assembly.
+    resc = jnp.asarray(rescale_offdiag, dtype=jnp.float32)
+    offdiag = resc[pos] if resc.ndim == 1 else resc
     if is_diag_block:
         # within a diagonal block, the sample strata for rows and columns
         # coincide; u == v exactly when local ids match
         diag = rows_local[own] == col
-        scale = jnp.where(diag, 1.0, rescale_offdiag)
+        scale = jnp.where(diag, 1.0, offdiag)
     else:
-        scale = rescale_offdiag
+        scale = offdiag
     contrib = jnp.where(member, v * scale, 0.0).astype(dtype)
     out = jnp.zeros((b_r, b_c), dtype=dtype)
     return out.at[own, pos].add(contrib, mode="drop")

@@ -113,6 +113,20 @@ def _constrain(h: jax.Array) -> jax.Array:
         return h
 
 
+@jax.custom_jvp
+def _opt_barrier(x):
+    return jax.lax.optimization_barrier(x)
+
+
+@_opt_barrier.defjvp
+def _opt_barrier_jvp(primals, tangents):
+    # optimization_barrier has no differentiation rule on this jax version;
+    # it is semantically the identity, so tangents pass straight through
+    # (the barrier only needs to fence the primal carry)
+    (x,), (t,) = primals, tangents
+    return _opt_barrier(x), t
+
+
 def _maybe_remat(fn):
     if not _RUN_OPTS.remat:
         return fn
@@ -122,7 +136,7 @@ def _maybe_remat(fn):
         # without it XLA may hoist the first f32 upcast of the layer body
         # out of the while loop and stack the carries in f32, doubling the
         # dominant training buffer (observed on the 104B configs)
-        carry = jax.lax.optimization_barrier(carry)
+        carry = _opt_barrier(carry)
         return fn(carry, xs)
 
     return jax.checkpoint(wrapped)

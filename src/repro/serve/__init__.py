@@ -1,0 +1,21 @@
+"""Online GNN inference: micro-batched, communication-free neighborhood
+assembly over a trained GCN (the serving counterpart of the 4D train loop).
+
+    engine = InferenceEngine(params, cfg, dataset.adj_norm,
+                             dataset.features, ServeOptions())
+    logits = engine.predict([17, 42, 1001])
+"""
+from repro.serve.batcher import MicroBatch, MicroBatcher, WorkItem
+from repro.serve.assembler import (AssemblySpec, BatchPlan,
+                                   assemble_dense_block, make_spec,
+                                   make_support_pool, plan_batch)
+from repro.serve.cache import EmbeddingCache
+from repro.serve.engine import InferenceEngine, ServeOptions
+
+__all__ = [
+    "MicroBatch", "MicroBatcher", "WorkItem",
+    "AssemblySpec", "BatchPlan", "assemble_dense_block", "make_spec",
+    "make_support_pool", "plan_batch",
+    "EmbeddingCache",
+    "InferenceEngine", "ServeOptions",
+]

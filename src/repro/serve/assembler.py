@@ -1,0 +1,113 @@
+"""Neighborhood assembly for serving: the Alg.-2 machinery applied to an
+*arbitrary requested* vertex set instead of a ``(seed, step)``-derived one.
+
+Training samples S uniformly and rescales every off-diagonal edge by the one
+inclusion probability ``p = (B-1)/(N-1)`` (Eq. 23). Serving inverts the
+direction: the requested vertices R are *given* (probability 1) and the
+batch is completed with a uniformly drawn **support set** U ⊂ V \\ R that
+supplies neighborhood context. The unbiased rescale becomes per-column:
+
+    scale(col) = 1            if col ∈ R ∪ {diag}
+    scale(col) = (N-r)/|U|    if col ∈ U          (1/p_support)
+
+so that ``E_U[ Ã_S x_S ] = Ã x`` restricted to the requested rows — the same
+estimator as Eq. 24, specialised to a two-stratum sample (R at p=1, U at
+p_support). The heavy lifting — prefix-sum CSR row extraction, binary-search
+column membership, scatter assembly — is *the* training implementation,
+``repro.core.sampling.extract_dense_block`` (no copy-pasted Alg.-2 code);
+this module only plans the batch on the host.
+
+The support pool is a fixed permutation of V derived from a seed, so the
+support set for a given requested set is a pure function of
+``(seed, graph_version, R)`` — the serving analogue of the paper's
+communication-free ``(seed, step)`` sampling: any replica assembling the
+same micro-batch builds the identical block with zero coordination.
+
+Everything is static-shape: ``batch_ids`` always has exactly
+``slots + support`` distinct vertices, so ONE jitted apply function serves
+all traffic.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import sampling as smp
+from repro.graphs.csr import CSRMatrix
+
+
+class AssemblySpec(NamedTuple):
+    """Static shapes of one serving micro-batch."""
+
+    n: int          # true vertex count of the graph
+    slots: int      # requested-vertex capacity (micro-batcher slots)
+    support: int    # support vertices appended for neighborhood context
+    e_cap: int      # static bound on extracted nnz (Alg. 2)
+
+    @property
+    def total(self) -> int:
+        return self.slots + self.support
+
+
+def make_spec(A: CSRMatrix, slots: int, support: int,
+              e_cap: int | None = None) -> AssemblySpec:
+    n = A.n_rows
+    assert slots + support <= n, (
+        f"batch ({slots}+{support}) exceeds graph size {n}")
+    e_cap = e_cap or max((slots + support) * A.max_row_nnz(), 1)
+    return AssemblySpec(n=n, slots=slots, support=support, e_cap=e_cap)
+
+
+def make_support_pool(n: int, seed: int = 0) -> np.ndarray:
+    """Fixed uniform permutation of V — the deterministic support stream."""
+    return np.random.default_rng(seed).permutation(n).astype(np.int32)
+
+
+class BatchPlan(NamedTuple):
+    """Host-side plan for one micro-batch (all arrays static-shape)."""
+
+    batch_ids: np.ndarray   # (total,) sorted distinct int32 vertex ids
+    col_scale: np.ndarray   # (total,) float32 per-column rescale
+    req_pos: np.ndarray     # (k,) position of each requested vertex in batch_ids
+    num_requested: int      # r = |unique requested|
+
+
+def plan_batch(requested: np.ndarray, spec: AssemblySpec,
+               support_pool: np.ndarray) -> BatchPlan:
+    """Complete the requested set with support vertices and compute the
+    per-column rescale. ``requested`` is (k,), k <= slots, possibly with
+    duplicates (two queued requests may name the same vertex)."""
+    requested = np.asarray(requested, np.int64)
+    assert requested.size <= spec.slots, "micro-batch overflow"
+    uniq = np.unique(requested)                      # sorted, distinct
+    r = int(uniq.size)
+    need = spec.total - r
+    # first `need` pool entries outside R: a uniform (need)-subset of V \ R.
+    # Scanning the (r + need)-prefix suffices — at most r of its entries can
+    # be requested — keeping host work O(total), not O(n), per batch.
+    cand = support_pool[:r + need]
+    fill = cand[~np.isin(cand, uniq)][:need]
+    batch_ids = np.sort(np.concatenate([uniq, fill.astype(np.int64)]))
+    is_req = np.isin(batch_ids, uniq)
+    inv_p = (spec.n - r) / need if need > 0 else 1.0
+    col_scale = np.where(is_req, 1.0, inv_p).astype(np.float32)
+    req_pos = np.searchsorted(batch_ids, requested).astype(np.int32)
+    return BatchPlan(batch_ids=batch_ids.astype(np.int32),
+                     col_scale=col_scale, req_pos=req_pos, num_requested=r)
+
+
+def assemble_dense_block(rp: jax.Array, ci: jax.Array, val: jax.Array,
+                         batch_ids: jax.Array, col_scale: jax.Array,
+                         e_cap: int, dtype=jnp.float32) -> jax.Array:
+    """Extract the dense (total, total) normalized block for a planned batch.
+
+    Jit-safe (static shapes); delegates to the training extraction. The block
+    is 'diagonal' in the training sense — row and column vertex sets
+    coincide — so self-loops stay unrescaled exactly as in Eq. 24.
+    """
+    return smp.extract_dense_block(
+        rp, ci, val, batch_ids, batch_ids, e_cap,
+        rescale_offdiag=col_scale, is_diag_block=True, dtype=dtype)

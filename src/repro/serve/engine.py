@@ -1,0 +1,282 @@
+"""Online GNN inference engine: submit/poll + synchronous predict.
+
+One engine owns a trained GCN, the graph CSR, a micro-batcher, an optional
+embedding cache, and ONE jitted apply function — every micro-batch, whatever
+its composition, runs through the same static-shape computation
+(``slots + support`` vertices), so there is exactly one compilation for the
+lifetime of the engine.
+
+Request lifecycle::
+
+    rid = eng.submit([v0, v1, ...])     # enqueue; full batches run inline
+    eng.pump()                          # flush deadline-expired batches
+    out = eng.poll(rid)                 # (k, num_classes) logits or None
+
+``predict(ids)`` is the synchronous convenience wrapper (submit + drain +
+poll). The engine is single-threaded and event-driven: nothing happens
+outside ``submit``/``pump``/``poll``/``drain`` calls. In **replay mode** the
+clock is virtual (advanced only by ``advance()``/explicit ``now=``), so an
+identical request stream produces bit-identical outputs — the deterministic
+harness the tests rely on.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import gcn_model as M
+from repro.graphs.csr import CSRMatrix
+from repro.serve import assembler as asm
+from repro.serve.batcher import MicroBatch, MicroBatcher
+from repro.serve.cache import EmbeddingCache
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeOptions:
+    """Knobs of the serving path (all static — no recompiles at runtime)."""
+
+    slots: int = 64             # requested-vertex capacity per micro-batch
+    support: int = 192          # support vertices appended per micro-batch
+    max_delay_ms: float = 2.0   # deadline flush for partial batches
+    micro_batch: bool = True    # False -> naive: one device call per request
+    use_cache: bool = False
+    cache_capacity: int = 8192
+    cache_quantize: str = "int8"
+    support_seed: int = 0
+    replay: bool = False        # virtual clock; deterministic replays
+
+
+class _Pending:
+    __slots__ = ("out", "remaining", "t_submit")
+
+    def __init__(self, k: int, dim: int, t_submit: float):
+        self.out = np.zeros((k, dim), np.float32)
+        self.remaining = k
+        self.t_submit = t_submit
+
+
+class InferenceEngine:
+    """Serve "classify these vertex IDs" requests against a trained GCN."""
+
+    def __init__(self, params, cfg: M.GCNConfig, A: CSRMatrix,
+                 features: np.ndarray, options: ServeOptions = ServeOptions(),
+                 e_cap: Optional[int] = None):
+        self.cfg = cfg
+        self.opts = options
+        self.spec = asm.make_spec(A, options.slots, options.support, e_cap)
+        self._params = params
+        self._pool = asm.make_support_pool(self.spec.n, options.support_seed)
+        self._batcher = MicroBatcher(options.slots,
+                                     options.max_delay_ms / 1e3)
+        self._cache = (EmbeddingCache(options.cache_capacity,
+                                      options.cache_quantize)
+                       if options.use_cache else None)
+        self._requests: Dict[int, _Pending] = {}
+        self._done: Dict[int, np.ndarray] = {}
+        self._next_id = 0
+        self._vnow = 0.0                       # virtual clock (replay mode)
+
+        rp = jnp.asarray(A.indptr)
+        ci = jnp.asarray(A.indices)
+        val = jnp.asarray(A.data)
+        feats = jnp.asarray(features, jnp.float32)
+        e_cap_static = self.spec.e_cap
+
+        def fwd(params, batch_ids, col_scale):
+            adj = asm.assemble_dense_block(rp, ci, val, batch_ids,
+                                           col_scale, e_cap_static)
+            return M.forward(params, adj, feats[batch_ids], cfg,
+                             train=False)
+
+        self._fwd = jax.jit(fwd)
+
+        # counters
+        self.completed = 0
+        self.device_calls = 0
+        self.latencies: List[float] = []
+        self._t_first: Optional[float] = None
+        self._t_last: Optional[float] = None
+
+    # -- clock ---------------------------------------------------------------
+
+    def _now(self, now: Optional[float]) -> float:
+        # caller-supplied timestamps are honored only in replay mode; in
+        # live mode everything is stamped with one monotonic clock so
+        # latency stats and batcher deadlines never mix time bases
+        if not self.opts.replay:
+            return time.monotonic()
+        if now is not None:
+            self._vnow = max(self._vnow, now)
+            return now
+        return self._vnow
+
+    def advance(self, dt: float) -> float:
+        """Advance the virtual clock (replay mode only)."""
+        assert self.opts.replay, "advance() is for replay mode"
+        self._vnow += dt
+        return self._vnow
+
+    # -- request API ---------------------------------------------------------
+
+    def submit(self, vertices: Sequence[int],
+               now: Optional[float] = None) -> int:
+        """Enqueue one classification request; returns its request id.
+
+        ``now`` is honored only in replay mode (virtual clock); a live
+        engine stamps everything with its own monotonic clock."""
+        now = self._now(now)
+        vertices = [int(v) for v in vertices]
+        assert vertices, "empty request"
+        assert all(0 <= v < self.spec.n for v in vertices), "vertex oob"
+        rid = self._next_id
+        self._next_id += 1
+        req = _Pending(len(vertices), self.cfg.num_classes, now)
+        self._requests[rid] = req
+        if self._t_first is None:
+            self._t_first = now if self.opts.replay else time.monotonic()
+
+        # cache hits are served at submit time and never occupy batch slots
+        # (hot vertices skip neighborhood assembly entirely)
+        miss_pos, miss_verts = [], []
+        for pos, v in enumerate(vertices):
+            row = self._cache.get(v) if self._cache is not None else None
+            if row is not None:
+                req.out[pos] = row
+                req.remaining -= 1
+            else:
+                miss_pos.append(pos)
+                miss_verts.append(v)
+        if req.remaining == 0:
+            self._finish(rid, now if self.opts.replay else time.monotonic())
+            return rid
+
+        if not self.opts.micro_batch:
+            # naive path: one device call per request, no coalescing
+            assert len(miss_verts) <= self.spec.slots, "request too large"
+            batches = self._batcher.add(rid, miss_verts, now, miss_pos)
+            batches += self._batcher.flush_all()
+        else:
+            batches = self._batcher.add(rid, miss_verts, now, miss_pos)
+        for b in batches:
+            self._run_batch(b, now)
+        return rid
+
+    def pump(self, now: Optional[float] = None) -> None:
+        """Run any micro-batches whose deadline has expired."""
+        now = self._now(now)
+        for b in self._batcher.flush_due(now):
+            self._run_batch(b, now)
+
+    def drain(self, now: Optional[float] = None) -> None:
+        """Flush every queued item regardless of deadlines."""
+        now = self._now(now)
+        for b in self._batcher.flush_all():
+            self._run_batch(b, now)
+
+    def poll(self, rid: int,
+             now: Optional[float] = None) -> Optional[np.ndarray]:
+        """Deadline-pump, then return the (k, C) logits if complete."""
+        self.pump(now)
+        return self._done.pop(rid, None)
+
+    def predict(self, vertices: Sequence[int],
+                now: Optional[float] = None) -> np.ndarray:
+        """Synchronous convenience: submit + drain + poll."""
+        rid = self.submit(vertices, now)
+        self.drain(now)
+        out = self._done.pop(rid)
+        return out
+
+    def invalidate(self) -> None:
+        """Graph/model changed: next lookups miss (cache version bump)."""
+        if self._cache is not None:
+            self._cache.bump_version()
+
+    def update_params(self, params) -> None:
+        """Swap model weights (same pytree structure; no recompile)."""
+        self._params = params
+        self.invalidate()
+
+    # -- internals -----------------------------------------------------------
+
+    def _run_batch(self, batch: MicroBatch, now: float) -> None:
+        dim = self.cfg.num_classes
+        verts = np.asarray(batch.vertices, np.int64)
+        distinct = np.unique(verts)
+        rows: Dict[int, np.ndarray] = {}
+
+        if self._cache is not None:
+            # re-check without touching hit/miss counters: these vertices
+            # already missed at submit time, but an earlier batch may have
+            # filled them while they sat in the queue
+            miss_list = []
+            for v in distinct:
+                row = self._cache.peek(v)
+                if row is not None:
+                    rows[int(v)] = row
+                else:
+                    miss_list.append(v)
+            miss = np.asarray(miss_list, np.int64)
+        else:
+            miss = distinct
+
+        if miss.size:
+            plan = asm.plan_batch(miss, self.spec, self._pool)
+            logits = self._fwd(self._params, jnp.asarray(plan.batch_ids),
+                               jnp.asarray(plan.col_scale))
+            logits = np.asarray(jax.block_until_ready(logits))
+            self.device_calls += 1
+            fresh = logits[plan.req_pos]          # (|miss|, C), in miss order
+            for v, row in zip(miss, fresh):
+                rows[int(v)] = row
+            if self._cache is not None:
+                self._cache.put_many(miss, fresh)
+
+        t_done = now if self.opts.replay else time.monotonic()
+        for it in batch.items:
+            req = self._requests[it.req_id]
+            req.out[it.pos] = rows[it.vertex]
+            req.remaining -= 1
+            if req.remaining == 0:
+                self._finish(it.req_id, t_done)
+
+    def _finish(self, rid: int, t_done: float) -> None:
+        req = self._requests.pop(rid)
+        self.latencies.append(t_done - req.t_submit)
+        self.completed += 1
+        self._t_last = t_done
+        self._done[rid] = req.out
+
+    # -- stats ---------------------------------------------------------------
+
+    def reset_stats(self) -> None:
+        """Zero the latency/throughput counters (e.g. after jit warmup).
+        Cache contents and pending requests are untouched."""
+        self.completed = 0
+        self.device_calls = 0
+        self.latencies = []
+        self._t_first = None
+        self._t_last = None
+
+    def stats(self) -> dict:
+        lat = np.asarray(self.latencies, np.float64)
+        span = ((self._t_last - self._t_first)
+                if (self._t_first is not None and self._t_last is not None)
+                else 0.0)
+        out = {
+            "completed": self.completed,
+            "device_calls": self.device_calls,
+            "batches": self._batcher.batches_emitted,
+            "pending": self._batcher.pending,
+            "p50_ms": float(np.percentile(lat, 50) * 1e3) if lat.size else 0.0,
+            "p99_ms": float(np.percentile(lat, 99) * 1e3) if lat.size else 0.0,
+            "req_per_s": self.completed / span if span > 0 else float("inf"),
+        }
+        if self._cache is not None:
+            out["cache"] = self._cache.stats()
+        return out

@@ -3,6 +3,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis", reason="hypothesis not installed")
 from hypothesis import assume, given, settings, strategies as st
 
 from repro.core import sampling as S

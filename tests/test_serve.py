@@ -1,0 +1,243 @@
+"""Tests for the online inference subsystem (repro.serve)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import gcn_model as M
+from repro.core import precision
+from repro.graphs import csr_to_dense, make_synthetic_dataset
+from repro.serve import (EmbeddingCache, InferenceEngine, MicroBatcher,
+                         ServeOptions, assemble_dense_block, make_spec,
+                         make_support_pool, plan_batch)
+
+
+# ---------------------------------------------------------------------------
+# Micro-batcher: flush semantics
+# ---------------------------------------------------------------------------
+
+def test_batcher_flushes_when_full():
+    b = MicroBatcher(slots=4, max_delay=1.0)
+    assert b.add(0, [1, 2], now=0.0) == []
+    assert b.pending == 2
+    (batch,) = b.add(1, [3, 4], now=0.0)          # 4th item -> full flush
+    assert [it.vertex for it in batch.items] == [1, 2, 3, 4]
+    assert [(it.req_id, it.pos) for it in batch.items] == [
+        (0, 0), (0, 1), (1, 0), (1, 1)]
+    assert b.pending == 0
+
+
+def test_batcher_splits_oversized_request():
+    b = MicroBatcher(slots=2, max_delay=1.0)
+    out = b.add(0, [5, 6, 7, 8, 9], now=0.0)      # 5 items -> 2 full batches
+    assert len(out) == 2 and b.pending == 1
+    (tail,) = b.flush_all()
+    assert [it.vertex for it in tail.items] == [9]
+
+
+def test_batcher_deadline_flush():
+    b = MicroBatcher(slots=8, max_delay=0.010)
+    assert b.next_deadline() is None              # empty queue: no deadline
+    b.add(0, [1, 2], now=0.0)
+    assert b.next_deadline() == pytest.approx(0.010)
+    assert b.flush_due(now=0.005) == []           # deadline not reached
+    (batch,) = b.flush_due(now=0.011)             # oldest waited > 10 ms
+    assert [it.vertex for it in batch.items] == [1, 2]
+    assert b.flush_due(now=99.0) == []            # queue empty
+
+
+def test_batcher_positions_override():
+    b = MicroBatcher(slots=8, max_delay=1.0)
+    b.add(3, [10, 11], now=0.0, positions=[4, 7])
+    (batch,) = b.flush_all()
+    assert [(it.pos, it.vertex) for it in batch.items] == [(4, 10), (7, 11)]
+
+
+# ---------------------------------------------------------------------------
+# Assembler: Alg.-2 reuse and reference equivalence
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def tiny_ds():
+    return make_synthetic_dataset(n=64, num_classes=4, d_in=8,
+                                  avg_degree=6, seed=3)
+
+
+def test_assembler_full_coverage_matches_dense(tiny_ds):
+    """With support covering all of V, the assembled block must equal the
+    full normalized adjacency exactly (all rescales are 1)."""
+    A = tiny_ds.adj_norm
+    spec = make_spec(A, slots=8, support=A.n_rows - 8)
+    pool = make_support_pool(A.n_rows, seed=0)
+    plan = plan_batch(np.array([3, 9, 31]), spec, pool)
+    assert np.array_equal(plan.batch_ids, np.arange(A.n_rows))
+    np.testing.assert_allclose(plan.col_scale, 1.0)
+    adj = assemble_dense_block(
+        jnp.asarray(A.indptr), jnp.asarray(A.indices), jnp.asarray(A.data),
+        jnp.asarray(plan.batch_ids), jnp.asarray(plan.col_scale), spec.e_cap)
+    np.testing.assert_allclose(np.asarray(adj), csr_to_dense(A), atol=0)
+
+
+def test_assembler_partial_support_scales(tiny_ds):
+    """Partial support: entries must equal A[bi, bj] * scale_j with scale 1
+    on requested/diagonal columns and (n-r)/|U| on support columns."""
+    A = tiny_ds.adj_norm
+    n = A.n_rows
+    spec = make_spec(A, slots=4, support=20)
+    pool = make_support_pool(n, seed=1)
+    req = np.array([7, 2, 7])                     # duplicates allowed
+    plan = plan_batch(req, spec, pool)
+    assert plan.batch_ids.shape == (24,)
+    assert len(np.unique(plan.batch_ids)) == 24   # distinct, static shape
+    assert plan.num_requested == 2
+    # requested vertices present, mapped back in request order
+    np.testing.assert_array_equal(plan.batch_ids[plan.req_pos], req)
+    inv_p = (n - 2) / (24 - 2)
+    dense = csr_to_dense(A)
+    adj = np.asarray(assemble_dense_block(
+        jnp.asarray(A.indptr), jnp.asarray(A.indices), jnp.asarray(A.data),
+        jnp.asarray(plan.batch_ids), jnp.asarray(plan.col_scale), spec.e_cap))
+    is_req = np.isin(plan.batch_ids, req)
+    ref = dense[np.ix_(plan.batch_ids, plan.batch_ids)]
+    scale = np.where(is_req, 1.0, inv_p)[None, :]
+    expect = ref * scale
+    np.fill_diagonal(expect, np.diag(ref))        # self-loops unrescaled
+    np.testing.assert_allclose(adj, expect, rtol=1e-6)
+
+
+def test_assembler_support_is_deterministic(tiny_ds):
+    A = tiny_ds.adj_norm
+    spec = make_spec(A, slots=4, support=16)
+    pool = make_support_pool(A.n_rows, seed=5)
+    p1 = plan_batch(np.array([1, 2]), spec, pool)
+    p2 = plan_batch(np.array([1, 2]), spec, pool)
+    np.testing.assert_array_equal(p1.batch_ids, p2.batch_ids)
+    np.testing.assert_array_equal(p1.col_scale, p2.col_scale)
+
+
+# ---------------------------------------------------------------------------
+# Quantization + embedding cache
+# ---------------------------------------------------------------------------
+
+def test_int8_roundtrip(rng):
+    x = rng.normal(size=(5, 32)).astype(np.float32) * 10
+    q, scale = precision.quantize_int8(x)
+    assert q.dtype == np.int8 and scale.shape == (5, 1)
+    err = np.abs(precision.dequantize_int8(q, scale) - x)
+    assert err.max() <= (np.abs(x).max(axis=-1, keepdims=True) / 127).max()
+    # all-zero rows survive
+    q0, s0 = precision.quantize_int8(np.zeros((2, 4)))
+    np.testing.assert_array_equal(precision.dequantize_int8(q0, s0), 0.0)
+
+
+def test_cache_hit_miss_and_version_bump(rng):
+    c = EmbeddingCache(capacity=16, quantize="int8")
+    v = rng.normal(size=(8,)).astype(np.float32)
+    assert c.get(3) is None
+    c.put(3, v)
+    got = c.get(3)
+    np.testing.assert_allclose(got, v, atol=np.abs(v).max() / 127 + 1e-7)
+    c.bump_version()                              # graph changed
+    assert c.get(3) is None                       # stale entry misses
+    st = c.stats()
+    assert st["hits"] == 1 and st["misses"] == 2 and st["version"] == 1
+
+
+def test_cache_lru_eviction(rng):
+    c = EmbeddingCache(capacity=2, quantize="f32")
+    for i in range(3):
+        c.put(i, np.full(4, float(i), np.float32))
+    assert c.get(0) is None and c.evictions == 1  # oldest evicted
+    assert c.get(1) is not None and c.get(2) is not None
+
+
+# ---------------------------------------------------------------------------
+# Engine: end-to-end, replay determinism, cache invalidation
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def served():
+    ds = make_synthetic_dataset(n=128, num_classes=4, d_in=8,
+                                avg_degree=6, seed=1)
+    cfg = M.GCNConfig(d_in=8, d_hidden=16, num_layers=2, num_classes=4,
+                      dropout=0.0)
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+    return ds, cfg, params
+
+
+def test_engine_predict_matches_reference_forward(served):
+    """Full-coverage support -> serving must reproduce the dense reference
+    forward on the requested rows exactly."""
+    ds, cfg, params = served
+    eng = InferenceEngine(params, cfg, ds.adj_norm, ds.features,
+                          ServeOptions(slots=8, support=120))
+    out = eng.predict([5, 77, 11])
+    dense = jnp.asarray(csr_to_dense(ds.adj_norm))
+    ref = np.asarray(M.forward(params, dense, jnp.asarray(ds.features),
+                               cfg, train=False))
+    np.testing.assert_allclose(out, ref[[5, 77, 11]], atol=1e-5)
+
+
+def test_engine_replay_determinism(served):
+    """Same request stream under the virtual clock -> identical outputs."""
+    ds, cfg, params = served
+
+    def run():
+        eng = InferenceEngine(
+            params, cfg, ds.adj_norm, ds.features,
+            ServeOptions(slots=4, support=28, max_delay_ms=5.0,
+                         use_cache=True, replay=True))
+        outs = []
+        r0 = eng.submit([1, 2, 3], now=0.000)
+        r1 = eng.submit([2, 9], now=0.001)        # fills batch -> runs
+        r2 = eng.submit([1], now=0.002)           # cache hit in run 2? no:
+        eng.pump(now=0.010)                       # deadline flush
+        for r in (r0, r1, r2):
+            outs.append(eng.poll(r, now=0.010))
+        return outs, eng.stats()
+
+    a, sa = run()
+    b, sb = run()
+    for x, y in zip(a, b):
+        assert x is not None
+        np.testing.assert_array_equal(x, y)       # bit-identical
+    assert sa["device_calls"] == sb["device_calls"]
+    assert sa["batches"] == sb["batches"]
+
+
+def test_engine_deadline_holds_partial_batch(served):
+    ds, cfg, params = served
+    eng = InferenceEngine(params, cfg, ds.adj_norm, ds.features,
+                          ServeOptions(slots=8, support=24, max_delay_ms=5.0,
+                                       replay=True))
+    rid = eng.submit([3], now=0.0)
+    assert eng.poll(rid, now=0.002) is None       # before deadline: queued
+    out = eng.poll(rid, now=0.006)                # past deadline: flushed
+    assert out is not None and out.shape == (1, cfg.num_classes)
+
+
+def test_engine_cache_serves_hits_and_invalidates(served):
+    ds, cfg, params = served
+    eng = InferenceEngine(params, cfg, ds.adj_norm, ds.features,
+                          ServeOptions(slots=4, support=28, max_delay_ms=0.0,
+                                       use_cache=True, replay=True))
+    first = eng.predict([5, 6], now=0.0)
+    calls = eng.device_calls
+    again = eng.predict([5, 6], now=1.0)          # both cached
+    assert eng.device_calls == calls              # no new device call
+    np.testing.assert_allclose(again, first, atol=np.abs(first).max() / 100)
+    eng.invalidate()                              # graph-version bump
+    eng.predict([5, 6], now=2.0)
+    assert eng.device_calls == calls + 1          # recomputed after bump
+
+
+def test_engine_naive_mode_one_call_per_request(served):
+    ds, cfg, params = served
+    eng = InferenceEngine(params, cfg, ds.adj_norm, ds.features,
+                          ServeOptions(slots=8, support=24,
+                                       micro_batch=False, replay=True))
+    for i, t in enumerate([0.0, 0.1, 0.2]):
+        out = eng.poll(eng.submit([i], now=t), now=t)
+        assert out is not None                    # served inline, no queueing
+    assert eng.device_calls == 3
+    assert eng.stats()["completed"] == 3

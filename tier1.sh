@@ -1,0 +1,7 @@
+#!/usr/bin/env bash
+# Tier-1 verification: the ROADMAP.md gate every PR must keep green.
+#   ./tier1.sh            # whole suite, stop at first failure
+#   ./tier1.sh -k serve   # extra pytest args pass through
+set -euo pipefail
+cd "$(dirname "$0")"
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} exec python -m pytest -x -q "$@"
