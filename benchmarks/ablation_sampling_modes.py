@@ -10,6 +10,7 @@ import jax.numpy as jnp
 from benchmarks.common import csv
 from repro.core import gcn_model as M
 from repro.core import sampling as S
+from repro.core.minibatch import MinibatchBuilder
 from repro.graphs import csr_to_dense, make_synthetic_dataset
 from repro.optim import AdamW
 
@@ -32,21 +33,25 @@ def main():
     cfg = M.GCNConfig(d_in=32, d_hidden=96, num_layers=3, num_classes=8,
                       dropout=0.2)
 
+    # sampling-mode dispatch lives in the unified batch-construction layer
+    builders = {
+        "exact": MinibatchBuilder(
+            scfg=S.SampleConfig(n_pad=n, g=1, batch=B, e_cap=e_cap),
+            mode="exact"),
+        "stratified": MinibatchBuilder(
+            scfg=S.SampleConfig(n_pad=n, g=4, batch=B, e_cap=e_cap),
+            mode="stratified"),
+    }
+
     def make_batch(mode, key):
-        if mode == "exact":
-            return S.make_minibatch_exact(key, rp, ci, val, feats, labels,
-                                          n, B, e_cap)
-        if mode == "stratified":
-            scfg = S.SampleConfig(n_pad=n, g=4, batch=B, e_cap=e_cap)
-            return S.make_minibatch_stratified(key, rp, ci, val, feats,
-                                               labels, scfg)
+        if mode in builders:
+            return builders[mode].build_single(key, rp, ci, val, feats,
+                                               labels)
         # "no_rescale": exact sampling WITHOUT Eq. 24 — the ablated control
-        mb = S.make_minibatch_exact(key, rp, ci, val, feats, labels, n, B,
-                                    e_cap)
+        mb = builders["exact"].build_single(key, rp, ci, val, feats, labels)
         s = mb.vertex_ids
-        raw = S.extract_dense_block(rp, ci, val, s, s, e_cap,
-                                    rescale_offdiag=1.0,
-                                    is_diag_block=True)
+        raw = builders["exact"].extract_block(rp, ci, val, s, s,
+                                              col_scale=1.0, diag=True)
         return mb._replace(adj=raw)
 
     results = {}

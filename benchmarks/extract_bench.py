@@ -1,0 +1,88 @@
+"""Mini-batch extraction micro-benchmark (interpret mode on CPU — relative
+evidence, not TPU wall time): the three backends of the unified
+``core.minibatch`` layer on one sampled block at ``gcn_paper`` config
+sizes (ogbn-products-like degree, paper batch B = 1024, 3-layer GCN):
+
+  * ``dense_jax``    — reference Alg. 2 (COO triples through HBM + scatter)
+  * ``ell_jax``      — direct-to-block-ELL extraction (sort/rank + scatter)
+  * ``fused_pallas`` — kernels/extract_gather.py (phases 2-4 in one kernel)
+
+Also reports the builder-level end-to-end construction time (sample +
+3-plane extraction + slices) for the jax and pallas backends, which is the
+quantity the §V-A pipeline hides off the critical path.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import csv, time_fn
+from repro.configs.gcn_paper import paper_model
+from repro.core import fourd, gcn_model as M, pipeline as PL, sampling as S
+from repro.graphs import build_partitioned_graph, make_synthetic_dataset
+from repro.kernels.extract_gather import extract_dense_fused
+from repro.kernels.spmm_ell import ell_to_dense
+from repro.optim import AdamW
+
+N = 8192          # synthetic stand-in scaled to fit CI; degree matches
+B = 1024          # the paper's per-group mini-batch at gcn_paper scale
+AVG_DEG = 16
+
+
+def main():
+    cfg = paper_model("ogbn-products")     # exercises the real config path
+    ds = make_synthetic_dataset(n=N, num_classes=cfg.num_classes, d_in=32,
+                                avg_degree=AVG_DEG, seed=0)
+    A = ds.adj_norm
+    rp, ci, val = (jnp.array(A.indptr), jnp.array(A.indices),
+                   jnp.array(A.data))
+    md = A.max_row_nnz()
+    e_cap = B * md
+    rng = np.random.default_rng(0)
+    s = jnp.array(np.sort(rng.choice(N, B, replace=False)).astype(np.int32))
+    inv_p = (N - 1) / (B - 1)
+
+    f_dense = jax.jit(lambda: S.extract_dense_block(
+        rp, ci, val, s, s, e_cap, rescale_offdiag=inv_p,
+        is_diag_block=True))
+    f_ell = jax.jit(lambda: S.extract_block_ell(
+        rp, ci, val, s, s, e_cap, rescale_offdiag=inv_p,
+        is_diag_block=True, bm=128, bn=128, n_slots=8))
+    f_fused = jax.jit(lambda: extract_dense_fused(
+        rp, ci, val, s, s, col_scale=inv_p, diag=True, max_deg=md))
+
+    us_dense = time_fn(f_dense, iters=6)
+    us_ell = time_fn(f_ell, iters=6)
+    us_fused = time_fn(f_fused, iters=6)
+
+    ref = np.array(f_dense())
+    assert np.array_equal(ref, np.array(f_fused())), "fused != oracle"
+    tiles, colidx = f_ell()
+    err = np.abs(np.array(ell_to_dense(tiles, colidx, B)) - ref).max()
+    assert err < 1e-5, err
+
+    nnz = int((ref != 0).sum())
+    csv("extract_dense_jax", us_dense, f"B={B} nnz={nnz}")
+    csv("extract_ell_jax", us_ell, f"dense_jax={us_dense:.1f}us")
+    csv("extract_fused_pallas", us_fused,
+        f"dense_jax={us_dense:.1f}us max_deg={md} (interpret mode)")
+
+    # builder end-to-end (sample + 3 planes + slices) at g = 1
+    pg = build_partitioned_graph(ds, g=1)
+    mcfg = M.GCNConfig(d_in=32, d_hidden=256, num_layers=3,
+                       num_classes=cfg.num_classes, dropout=0.0)
+    mesh = fourd.make_mesh_4d(1, 1)
+    for impl in ("jax", "pallas"):
+        plan = fourd.build_plan(
+            pg, mcfg, mesh, batch=B,
+            opts=fourd.TrainOptions(extract_impl=impl))
+        sample_fn, _ = PL.make_prefetched_train_step(plan, AdamW(lr=1e-3))
+        graph = plan.shard_graph(pg)
+        f = jax.jit(lambda st: sample_fn(graph, st))
+        us = time_fn(f, jnp.asarray(0), iters=4)
+        csv(f"build_local_{impl}", us, f"B={B} planes=3")
+
+
+if __name__ == "__main__":
+    main()

@@ -30,6 +30,8 @@ BENCHMARKS = [
      "Fig. 8: epoch-time breakdown vs data-parallel groups"),
     ("benchmarks.kernel_bench", 1,
      "Pallas kernels: block-ELL SpMM + fused tail vs jnp reference"),
+    ("benchmarks.extract_bench", 1,
+     "Extraction: dense vs block-ELL vs Pallas fused at gcn_paper sizes"),
     ("benchmarks.serve_bench", 1,
      "Serving: p50/p99 latency + req/s — naive vs micro-batched vs +cache"),
     ("benchmarks.ablation_sampling_modes", 1,

@@ -2,7 +2,8 @@
 
 Demonstrates the paper's core loop (uniform vertex sampling -> induced
 subgraph with unbiased rescaling -> GCN step, Alg. 1) on a synthetic SBM
-stand-in for ogbn-products.
+stand-in for ogbn-products, built through the unified batch-construction
+layer (``repro.core.minibatch.MinibatchBuilder``).
 
     PYTHONPATH=src python examples/quickstart.py
 """
@@ -11,6 +12,7 @@ import jax.numpy as jnp
 
 from repro.core import gcn_model as M
 from repro.core import sampling as S
+from repro.core.minibatch import MinibatchBuilder
 from repro.graphs import csr_to_dense, get_dataset
 from repro.optim import AdamW
 
@@ -30,11 +32,17 @@ def main():
     opt = AdamW(lr=5e-3, weight_decay=1e-4)
     opt_state = opt.init(params)
 
+    # Alg. 1 behind the one batch-construction layer: swap mode to
+    # "stratified", fmt to ELL, or impl to "pallas" without touching the
+    # training loop.
+    builder = MinibatchBuilder(
+        scfg=S.SampleConfig(n_pad=n, g=1, batch=B, e_cap=e_cap),
+        mode="exact")
+
     @jax.jit
     def train_step(params, opt_state, step):
         key = S.step_key(0, step)                       # shared seed + step
-        mb = S.make_minibatch_exact(key, rp, ci, val, feats, labels,
-                                    n, B, e_cap)        # Alg. 1
+        mb = builder.build_single(key, rp, ci, val, feats, labels)
         def loss_fn(p):
             logits = M.forward(p, mb.adj, mb.feats, cfg, dropout_key=key,
                                train=True)

@@ -15,12 +15,13 @@ are represented by their algorithms, not their codebases.
 """
 from __future__ import annotations
 
-from typing import NamedTuple, Sequence, Tuple
+from typing import NamedTuple, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 
-from repro.core.sampling import extract_dense_block
+from repro.core.minibatch import BlockFormat, MinibatchBuilder
+from repro.core.sampling import SampleConfig
 
 
 # ---------------------------------------------------------------------------
@@ -41,6 +42,7 @@ def saint_node_sample(
     features: jax.Array, labels: jax.Array,
     degrees: jax.Array,       # (N,) float32 degree (sampling distribution)
     n: int, batch: int, e_cap: int,
+    builder: Optional[MinibatchBuilder] = None,
 ) -> SaintBatch:
     """GraphSAINT-node: sample B vertices with p_v ∝ deg(v) (without
     replacement via Gumbel top-k), build the induced subgraph, and normalize:
@@ -48,7 +50,16 @@ def saint_node_sample(
       aggregator: a_uv / q_uv with q_uv = 1 - (1-p̃_u)(1-p̃_v) ≈ p̃_u + p̃_v,
                   p̃_v = min(1, B * p_v)  (independent-inclusion estimate)
       loss:       weight 1/(B * p_v) per sampled vertex.
+
+    The induced subgraph goes through the shared batch-construction layer
+    (``core.minibatch``): pass a ``builder`` to select the extraction
+    backend (e.g. the fused Pallas kernel); SAINT's own normalization is
+    applied on top of an unrescaled block (col_scale = 1).
     """
+    if builder is None:
+        builder = MinibatchBuilder(
+            scfg=SampleConfig(n_pad=n, g=1, batch=batch, e_cap=e_cap),
+            mode="exact")
     logp = jnp.log(jnp.maximum(degrees, 1e-9))
     gumbel = -jnp.log(-jnp.log(
         jax.random.uniform(key, (n,), minval=1e-9, maxval=1.0)))
@@ -57,8 +68,9 @@ def saint_node_sample(
     p_v = degrees / jnp.maximum(degrees.sum(), 1e-9)
     p_incl = jnp.minimum(1.0, batch * p_v)                    # (N,)
 
-    adj = extract_dense_block(rp, ci, val, s, s, e_cap,
-                              rescale_offdiag=1.0, is_diag_block=True)
+    adj = builder.extract_block(rp, ci, val, s, s, col_scale=1.0,
+                                diag=True, e_cap=e_cap,
+                                fmt=BlockFormat.DENSE, dtype=jnp.float32)
     pu = p_incl[s]                                            # (B,)
     q = jnp.clip(pu[:, None] + pu[None, :] - pu[:, None] * pu[None, :],
                  1e-9, 1.0)

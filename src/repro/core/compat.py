@@ -1,0 +1,59 @@
+"""JAX version compatibility shims.
+
+The repo targets the modern public API (``jax.shard_map`` with
+``check_vma``, ``jax.sharding.AxisType``); older installs (jax <= 0.4.x)
+only ship ``jax.experimental.shard_map.shard_map`` with ``check_rep`` and
+meshes without axis types. Every call site imports from here so the rest of
+the codebase is written against one surface.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+
+__all__ = ["shard_map", "make_mesh", "cost_analysis", "axis_size"]
+
+
+def axis_size(axis_name) -> int:
+    """``jax.lax.axis_size`` where available; older versions spell the
+    static mesh-axis extent ``psum(1, axis)`` (constant-folded by XLA)."""
+    if hasattr(jax.lax, "axis_size"):
+        return jax.lax.axis_size(axis_name)
+    return jax.lax.psum(1, axis_name)
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool = True):
+    """``jax.shard_map`` where available, else the experimental fallback
+    (which spells ``check_vma`` as ``check_rep``)."""
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=check_vma)
+    from jax.experimental.shard_map import shard_map as _sm
+    return _sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+               check_rep=check_vma)
+
+
+def make_mesh(shape, axes) -> Any:
+    """Auto-typed device mesh on any jax version: prefer explicit Auto axis
+    types (required once explicit sharding lands), degrade to the plain
+    constructors when ``AxisType`` / ``make_mesh`` don't exist yet."""
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is not None:
+        return jax.make_mesh(shape, axes,
+                             axis_types=(axis_type.Auto,) * len(axes))
+    if hasattr(jax, "make_mesh"):
+        return jax.make_mesh(shape, axes)
+    import numpy as np
+    devices = np.array(jax.devices()[: int(np.prod(shape))]).reshape(shape)
+    return jax.sharding.Mesh(devices, axes)
+
+
+def cost_analysis(compiled) -> dict:
+    """``Compiled.cost_analysis()`` as one flat dict: newer jax returns the
+    dict directly, older versions a one-element list of per-computation
+    dicts."""
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0] if cost else {}
+    return cost

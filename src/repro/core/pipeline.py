@@ -9,11 +9,11 @@ loop state. XLA's latency-hiding scheduler can then interleave the sampling
 gathers with the backward pass's all-reduces: sampling leaves the critical
 path, which is the paper's goal.
 
-Concretely the carried state is ``(params, opt_state, minibatch_t)`` and one
-step computes::
+Concretely the carried state is ``(params, opt_state, minibatch_t)`` — the
+batch a ``core.minibatch.Minibatch`` pytree — and one step computes::
 
     grads   = grad(loss)(params, minibatch_t)         # consume batch t
-    batch'  = sample_and_extract(step + 1)            # produce batch t+1
+    batch'  = builder.build_local(step + 1)           # produce batch t+1
     params' = optimizer(params, psum_d(grads))
 
 The two top lines share no data, so the compiler is free to overlap them.
@@ -23,16 +23,16 @@ the unpipelined step (shifted by the warm-up batch).
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Tuple
+from typing import Any
 
 import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from repro.core import pmm3d
-from repro.core import sampling as smp
-from repro.core.fourd import (FourDPlan, _build_local_minibatch,
-                              distributed_forward)
+from repro.core.compat import shard_map
+from repro.core.fourd import FourDPlan, distributed_forward
+from repro.core.minibatch import BlockFormat, GraphShards, Minibatch
 
 
 @jax.tree_util.register_dataclass
@@ -40,12 +40,16 @@ from repro.core.fourd import (FourDPlan, _build_local_minibatch,
 class PrefetchState:
     params: Any
     opt_state: Any
-    minibatch: Tuple[Any, ...]   # (adj_blocks x3 stacked, x_local, y_local)
+    minibatch: Minibatch     # batch t, carried into step t (global arrays)
 
 
-def _minibatch_specs(plan: FourDPlan):
+def _minibatch_specs(plan: FourDPlan) -> Minibatch:
     """Sharding specs of the carried mini-batch (device-local blocks live in
-    stacked global arrays)."""
+    stacked global arrays), as a ``Minibatch``-shaped spec pytree."""
+    if plan.builder.fmt is not BlockFormat.DENSE:
+        raise NotImplementedError(
+            "prefetched pipeline carries dense blocks; block-ELL prefetch "
+            "needs per-leaf tile specs")
     st = pmm3d.initial_state()
     adj_specs = []
     for _ in range(min(3, plan.cfg.num_layers)):
@@ -55,7 +59,8 @@ def _minibatch_specs(plan: FourDPlan):
         adj_specs.append(P("d", pr, pc))
         st = st.rotate()
     r_f = pmm3d.state_after_layers(plan.cfg.num_layers).row
-    return (tuple(adj_specs), P("d", "x", "z"), P("d", r_f))
+    return Minibatch(adj=tuple(adj_specs), feats=P("d", "x", "z"),
+                     labels=P("d", r_f))
 
 
 def make_prefetched_train_step(plan: FourDPlan, optimizer):
@@ -67,53 +72,44 @@ def make_prefetched_train_step(plan: FourDPlan, optimizer):
       batch ``step + 1`` inside the same XLA program, and applies the
       optimizer. Returns (state', loss).
     """
-    cfg, scfg, opts = plan.cfg, plan.scfg, plan.opts
+    cfg, opts, builder = plan.cfg, plan.opts, plan.builder
     mesh = plan.mesh
     ds = plan.data_specs
-    adj_sp = (ds["adj1"],) * 3 + (ds["adj2"],) * 3 + (ds["adj3"],) * 3
     mb_specs = _minibatch_specs(plan)
-    n_adj = min(3, cfg.num_layers)
 
-    def local_sample(rp1, ci1, val1, rp2, ci2, val2, rp3, ci3, val3,
-                     feats, labels, step):
-        sq = lambda a: a[0, 0]
-        adj_blocks, x_loc, y_loc = _build_local_minibatch(
-            (sq(rp1), sq(rp2), sq(rp3)), (sq(ci1), sq(ci2), sq(ci3)),
-            (sq(val1), sq(val2), sq(val3)),
-            feats, labels, scfg, opts, step, cfg.num_layers)
+    def local_sample(shards: GraphShards, feats, labels, step) -> Minibatch:
+        mb = builder.build_local(shards.squeeze_blocks(), feats, labels,
+                                 step, cfg.num_layers)
         # re-add leading dims so out_specs can scatter them on the mesh
-        return (tuple(b[None] for b in adj_blocks),
-                x_loc[None], y_loc[None])
+        return mb.add_leading()
 
-    sample_sharded = jax.shard_map(
+    sample_sharded = shard_map(
         local_sample, mesh=mesh,
-        in_specs=(*adj_sp, ds["features"], plan.label_sp, P()),
+        in_specs=(plan.shards_specs, ds["features"], plan.label_sp, P()),
         out_specs=mb_specs, check_vma=False)
 
-    def sample_fn(graph, step):
-        a1, a2, a3 = graph["adj1"], graph["adj2"], graph["adj3"]
-        return sample_sharded(
-            a1[0], a1[1], a1[2], a2[0], a2[1], a2[2], a3[0], a3[1], a3[2],
-            graph["features"], graph["labels"], step)
+    def sample_fn(graph, step) -> Minibatch:
+        return sample_sharded(GraphShards.from_graph(graph),
+                              graph["features"], graph["labels"], step)
 
-    def local_loss(params, adj_blocks, x_loc, y_loc, step):
+    def local_loss(params, mb: Minibatch, step):
+        mb = mb.strip_leading()
         logits, st = distributed_forward(
-            params, tuple(b[0] for b in adj_blocks), x_loc[0], cfg, opts,
-            step=step, train=True)
+            params, mb.adj, mb.feats, cfg, opts, step=step, train=True)
         nll_sum, cnt = pmm3d.parallel_cross_entropy(
-            logits, y_loc[0], class_axis=st.rep, row_axis=st.row,
+            logits, mb.labels, class_axis=st.rep, row_axis=st.row,
             n_classes=cfg.num_classes)
         return (nll_sum / jnp.maximum(cnt, 1.0))[None]
 
-    loss_sharded = jax.shard_map(
+    loss_sharded = shard_map(
         local_loss, mesh=mesh,
-        in_specs=(plan.p_specs, mb_specs[0], mb_specs[1], mb_specs[2], P()),
+        in_specs=(plan.p_specs, mb_specs, P()),
         out_specs=P("d"), check_vma=False)
 
     @jax.jit
     def step_fn(state: PrefetchState, graph, step):
         def mean_loss(p):
-            return loss_sharded(p, *state.minibatch, step).mean()
+            return loss_sharded(p, state.minibatch, step).mean()
         loss, grads = jax.value_and_grad(mean_loss)(state.params)
         # prefetch: data-independent of the grads above -> overlappable
         next_mb = sample_fn(graph, step + 1)

@@ -214,7 +214,8 @@ def reshard_permute(t: jax.Array, from_state: PlaneState,
     *flattened* (r, c, p) axis tuple with the permutation computed on the
     host. jax.lax.ppermute accepts an axis-name tuple for exactly this.
     """
-    g = jax.lax.axis_size(from_state.row)
+    from repro.core.compat import axis_size
+    g = axis_size(from_state.row)
     perm = []
     # device logical coords under axis order (row, col, rep) = (i, j, k);
     # flat index = ((i * g) + j) * g + k.

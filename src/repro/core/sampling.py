@@ -135,6 +135,22 @@ def _extract_triples(rp, ci, val, rows_local, cols_local, e_cap):
     return own, pos, member, v, col
 
 
+def _edge_scale(rows_local, own, pos, col, rescale_offdiag, is_diag_block):
+    """Phase-4 rescale factor per extracted slot (Eq. 24).
+
+    ``rescale_offdiag`` is a scalar (one inclusion probability, Eq. 23) or a
+    (b_c,) per-column array (serving: requested at p=1, support at
+    p_support). ``is_diag_block`` marks that the row/column vertex sets
+    coincide, so self-loops (local ids equal) stay unrescaled; it may be a
+    python bool or a traced scalar (``jax.lax.axis_index`` comparisons
+    inside shard_map).
+    """
+    resc = jnp.asarray(rescale_offdiag, dtype=jnp.float32)
+    offdiag = resc[pos] if resc.ndim == 1 else resc
+    diag = jnp.logical_and(is_diag_block, rows_local[own] == col)
+    return jnp.where(diag, 1.0, offdiag)
+
+
 def extract_dense_block(
     rp: jax.Array,            # (n_local + 1,) int32 local row pointer
     ci: jax.Array,            # (e_pad,) int32 local col ids, pad = n_local
@@ -144,38 +160,31 @@ def extract_dense_block(
     e_cap: int,
     *,
     rescale_offdiag: jax.Array | float = 1.0,
-    is_diag_block: bool = False,
+    is_diag_block: jax.Array | bool = False,
     dtype=jnp.float32,
 ) -> jax.Array:
     """Extract the dense (b_r, b_c) sampled block of a padded-CSR shard.
 
     ``e_cap`` must bound the total nnz of the sampled rows; entries beyond it
     are dropped (choose ``e_cap = b_r * max_block_row_nnz`` for exactness).
-
-    ``rescale_offdiag`` is either a scalar (training: one inclusion
-    probability for every sampled column, Eq. 23) or a (b_c,) per-column
-    array (serving: requested vertices are included with probability 1,
-    support vertices with p_support — see ``repro/serve/assembler.py``).
+    Rescale semantics are in ``_edge_scale``.
     """
     b_r, b_c = rows_local.shape[0], cols_local.shape[0]
     if ci.shape[0] == 0:                     # empty graph shard
         return jnp.zeros((b_r, b_c), dtype=dtype)
     own, pos, member, v, col = _extract_triples(
         rp, ci, val, rows_local, cols_local, e_cap)
-
-    # Phase 4: unbiased rescale (Eq. 24) and assembly.
-    resc = jnp.asarray(rescale_offdiag, dtype=jnp.float32)
-    offdiag = resc[pos] if resc.ndim == 1 else resc
-    if is_diag_block:
-        # within a diagonal block, the sample strata for rows and columns
-        # coincide; u == v exactly when local ids match
-        diag = rows_local[own] == col
-        scale = jnp.where(diag, 1.0, offdiag)
-    else:
-        scale = offdiag
+    scale = _edge_scale(rows_local, own, pos, col, rescale_offdiag,
+                        is_diag_block)
     contrib = jnp.where(member, v * scale, 0.0).astype(dtype)
     out = jnp.zeros((b_r, b_c), dtype=dtype)
     return out.at[own, pos].add(contrib, mode="drop")
+
+
+def stratified_col_scale(row_range, col_range, inv_same, inv_cross):
+    """The stratified rescale as a (traced) scalar column factor: within a
+    vertex range use 1/p_same, across ranges 1/p_cross (DESIGN.md §5)."""
+    return jnp.where(row_range == col_range, inv_same, inv_cross)
 
 
 def extract_dense_block_stratified(
@@ -188,24 +197,15 @@ def extract_dense_block_stratified(
     inv_cross: float,         # 1/p_cross (cross-range constant)
     dtype=jnp.float32,
 ) -> jax.Array:
-    """Stratified-sampling variant of the extraction: the rescale constant
-    depends on whether the edge crosses vertex ranges (DESIGN.md §5), and
-    self-loops (possible only when ``row_range == col_range``) stay
-    unrescaled (Eq. 24). ``row_range`` / ``col_range`` may be traced scalars
-    (``jax.lax.axis_index`` inside shard_map)."""
-    b_r, b_c = rows_local.shape[0], cols_local.shape[0]
-    if ci.shape[0] == 0:                     # empty graph shard
-        return jnp.zeros((b_r, b_c), dtype=dtype)
-    own, pos, member, v, col = _extract_triples(
-        rp, ci, val, rows_local, cols_local, e_cap)
-
-    same_range = row_range == col_range
-    diag = same_range & (rows_local[own] == col)
-    factor = jnp.where(diag, 1.0,
-                       jnp.where(same_range, inv_same, inv_cross))
-    contrib = jnp.where(member, v * factor, 0.0).astype(dtype)
-    out = jnp.zeros((b_r, b_c), dtype=dtype)
-    return out.at[own, pos].add(contrib, mode="drop")
+    """Stratified-sampling extraction: one pairwise constant per block,
+    selected by whether the edge crosses vertex ranges; self-loops (possible
+    only when ``row_range == col_range``) stay unrescaled (Eq. 24).
+    ``row_range`` / ``col_range`` may be traced scalars."""
+    return extract_dense_block(
+        rp, ci, val, rows_local, cols_local, e_cap,
+        rescale_offdiag=stratified_col_scale(row_range, col_range,
+                                             inv_same, inv_cross),
+        is_diag_block=row_range == col_range, dtype=dtype)
 
 
 def rescale_constants(cfg: SampleConfig) -> Tuple[float, float]:
@@ -217,12 +217,12 @@ def rescale_constants(cfg: SampleConfig) -> Tuple[float, float]:
     return inv_same, 1.0 / p_cross
 
 
-def extract_block_ell_stratified(
+def extract_block_ell(
     rp: jax.Array, ci: jax.Array, val: jax.Array,
     rows_local: jax.Array, cols_local: jax.Array, e_cap: int,
     *,
-    row_range: jax.Array, col_range: jax.Array,
-    inv_same: float, inv_cross: float,
+    rescale_offdiag: jax.Array | float = 1.0,
+    is_diag_block: jax.Array | bool = False,
     bm: int, bn: int, n_slots: int,
     dtype=jnp.float32,
 ) -> Tuple[jax.Array, jax.Array]:
@@ -234,9 +234,10 @@ def extract_block_ell_stratified(
     so the dense extraction wastes memory by the inverse tile density. Here
     each nonzero is routed to its (row-block, col-block) tile; distinct
     tiles per row-block are ranked by a sort+unique pass (static shapes
-    throughout) and scattered into ``n_slots`` ELL slots. Tiles beyond
-    ``n_slots`` are dropped — callers size n_slots from the degree bound
-    exactly like ``e_cap``.
+    throughout) and scattered into ``n_slots`` ELL slots — slot s holds the
+    s-th smallest nonzero column-block. Tiles beyond ``n_slots`` are
+    dropped — callers size n_slots from the degree bound exactly like
+    ``e_cap``. Rescale semantics are in ``_edge_scale``.
 
     Returns (tiles (n_rb, n_slots, bm, bn), colidx (n_rb, n_slots)).
     """
@@ -249,11 +250,9 @@ def extract_block_ell_stratified(
 
     own, pos, member, v, col = _extract_triples(
         rp, ci, val, rows_local, cols_local, e_cap)
-    same_range = row_range == col_range
-    diag = same_range & (rows_local[own] == col)
-    factor = jnp.where(diag, 1.0,
-                       jnp.where(same_range, inv_same, inv_cross))
-    contrib = jnp.where(member, v * factor, 0.0).astype(dtype)
+    scale = _edge_scale(rows_local, own, pos, col, rescale_offdiag,
+                        is_diag_block)
+    contrib = jnp.where(member, v * scale, 0.0).astype(dtype)
 
     rb = own // bm
     cb = pos // bn
@@ -284,6 +283,24 @@ def extract_block_ell_stratified(
     colidx = colidx.at[rb, slot_c].max(
         jnp.where(ok, cb, 0).astype(jnp.int32), mode="drop")
     return tiles, colidx
+
+
+def extract_block_ell_stratified(
+    rp: jax.Array, ci: jax.Array, val: jax.Array,
+    rows_local: jax.Array, cols_local: jax.Array, e_cap: int,
+    *,
+    row_range: jax.Array, col_range: jax.Array,
+    inv_same: float, inv_cross: float,
+    bm: int, bn: int, n_slots: int,
+    dtype=jnp.float32,
+) -> Tuple[jax.Array, jax.Array]:
+    """Stratified-rescale variant of ``extract_block_ell`` (DESIGN.md §5)."""
+    return extract_block_ell(
+        rp, ci, val, rows_local, cols_local, e_cap,
+        rescale_offdiag=stratified_col_scale(row_range, col_range,
+                                             inv_same, inv_cross),
+        is_diag_block=row_range == col_range,
+        bm=bm, bn=bn, n_slots=n_slots, dtype=dtype)
 
 
 # ---------------------------------------------------------------------------

@@ -2,6 +2,8 @@
 
 * ``spmm_ell``        — block-ELL SpMM (GCN aggregation, Eq. 5/27; the
                         CSR-gather -> MXU-tile adaptation, DESIGN.md §3)
+* ``extract_gather``  — fused mini-batch extraction (Alg. 2 phases 2-4 in
+                        one kernel; backend of ``core.minibatch``)
 * ``fused_layer``     — fused RMSNorm+ReLU+dropout+residual (paper §V-C)
 * ``flash_attention`` — VMEM-resident running-softmax attention (the
                         fusion identified by EXPERIMENTS.md §Perf H1.2)

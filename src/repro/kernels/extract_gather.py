@@ -1,0 +1,116 @@
+"""Pallas fused mini-batch extraction — Alg. 2 phases 2-4 in one kernel.
+
+The pure-JAX extraction (``repro.core.sampling``) materializes the sampled
+edges as three ``(e_cap,)`` COO streams (row owner, column position, value)
+in HBM, then scatter-adds them into the dense block. This kernel fuses the
+whole pipeline so the intermediates never leave the core:
+
+  grid cell = one sampled row. Per cell the kernel
+    1. reads the row's CSR extent ``rp[row] .. rp[row+1]``   (phase 2),
+    2. walks its edges, matching each column id against the *whole* sorted
+       sampled-column vector with one VPU compare — the equality mask is
+       simultaneously the membership filter AND the scatter one-hot, so the
+       binary search and the scatter of the reference implementation
+       collapse into a single vectorized op                   (phase 3),
+    3. applies the per-column rescale (with the self-loop exemption of
+       Eq. 24) and accumulates into the output row            (phase 4).
+
+The ``(b_r, b_c)`` block is written exactly once; no COO triples round-trip
+through HBM. ``max_deg`` is the static per-row edge bound (the analogue of
+``e_cap``): callers pass the partition's ``max_block_row_nnz`` so nothing is
+truncated, exactly like sizing ``e_cap = b_r * max_block_row_nnz``.
+
+Rescale semantics match ``sampling.extract_dense_block`` bit-for-bit on
+graphs without duplicate edges (one contribution per output cell, so there
+is no accumulation-order ambiguity): ``col_scale`` is the per-column
+off-diagonal factor, ``diag`` (a traced or static bool) enables the
+self-loop exemption where the row id equals the column id.
+
+On CPU this runs through the Pallas interpreter (``interpret=True``, the
+repo default — see ``kernels/ops.py``); on TPU flip
+``REPRO_PALLAS_INTERPRET=0``.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _extract_kernel(rows_ref, diag_ref, cols_ref, cscale_ref,
+                    rp_ref, ci_ref, val_ref, o_ref, *, max_deg: int):
+    """One sampled row per grid cell: gather -> match -> rescale -> emit."""
+    row = rows_ref[0, 0]                         # this row's local vertex id
+    start = rp_ref[0, row]
+    cnt = rp_ref[0, row + 1] - start
+    cvec = cols_ref[0, :]                        # (b_c,) sorted sampled cols
+    # self-loops stay unrescaled (Eq. 24): lane is diagonal iff the sampled
+    # column equals this row's vertex id and the row/col strata coincide
+    is_diag = (diag_ref[0, 0] != 0) & (cvec == row)
+    lane_scale = jnp.where(is_diag, 1.0, cscale_ref[0, :])
+
+    def body(e, acc):
+        valid = e < cnt
+        idx = jnp.where(valid, start + e, 0)
+        col = ci_ref[0, idx]
+        v = val_ref[0, idx]
+        # membership + compact position + scatter in ONE compare: cols are
+        # sorted distinct, so at most one lane matches
+        hit = valid & (cvec == col)
+        return acc + jnp.where(hit, v, 0.0)
+
+    acc = jax.lax.fori_loop(
+        0, max_deg, body, jnp.zeros(cvec.shape, jnp.float32))
+    o_ref[0, :] = (acc * lane_scale).astype(o_ref.dtype)
+
+
+def extract_dense_fused(
+    rp: jax.Array,            # (n_local + 1,) int32 local row pointer
+    ci: jax.Array,            # (e_pad,) int32 local col ids
+    val: jax.Array,           # (e_pad,) float32 edge values
+    rows_local: jax.Array,    # (b_r,) sorted local sampled row ids
+    cols_local: jax.Array,    # (b_c,) sorted distinct local sampled col ids
+    *,
+    col_scale: jax.Array | float,   # scalar or (b_c,) off-diagonal rescale
+    diag: jax.Array | bool,         # row/col vertex sets coincide
+    max_deg: int,                   # static per-row nnz bound
+    dtype=jnp.float32,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Fused replacement for ``sampling.extract_dense_block``: returns the
+    dense rescaled ``(b_r, b_c)`` sampled block straight from padded CSR."""
+    if interpret is None:
+        from repro.kernels.ops import INTERPRET
+        interpret = INTERPRET
+    b_r, b_c = rows_local.shape[0], cols_local.shape[0]
+    if ci.shape[0] == 0 or max_deg == 0:         # empty graph shard
+        return jnp.zeros((b_r, b_c), dtype=dtype)
+
+    cscale = jnp.broadcast_to(
+        jnp.asarray(col_scale, jnp.float32), (b_c,)).reshape(1, b_c)
+    rows2 = rows_local.astype(jnp.int32).reshape(b_r, 1)
+    diag2 = jnp.asarray(diag, jnp.int32).reshape(1, 1)
+    rp2 = rp.astype(jnp.int32).reshape(1, -1)
+    ci2 = ci.astype(jnp.int32).reshape(1, -1)
+    val2 = val.astype(jnp.float32).reshape(1, -1)
+    cols2 = cols_local.astype(jnp.int32).reshape(1, b_c)
+
+    kernel = functools.partial(_extract_kernel, max_deg=max_deg)
+    return pl.pallas_call(
+        kernel,
+        grid=(b_r,),
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda i: (i, 0)),          # this row's id
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),          # diag flag
+            pl.BlockSpec((1, b_c), lambda i: (0, 0)),        # sampled cols
+            pl.BlockSpec((1, b_c), lambda i: (0, 0)),        # col rescale
+            pl.BlockSpec(rp2.shape, lambda i: (0, 0)),       # CSR row ptr
+            pl.BlockSpec(ci2.shape, lambda i: (0, 0)),       # CSR col ids
+            pl.BlockSpec(val2.shape, lambda i: (0, 0)),      # CSR values
+        ],
+        out_specs=pl.BlockSpec((1, b_c), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b_r, b_c), dtype),
+        interpret=interpret,
+    )(rows2, diag2, cols2, cscale, rp2, ci2, val2)

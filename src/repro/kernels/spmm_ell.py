@@ -107,6 +107,46 @@ def dense_to_block_ell(adj: jax.Array, bm: int, bn: int, n_slots: int):
     return tiles, colidx
 
 
+def dense_to_block_ell_ranked(adj: jax.Array, bm: int, bn: int,
+                              n_slots: int):
+    """Convert dense -> block-ELL with the SAME slot layout as the direct
+    extraction (``sampling.extract_block_ell``): slot s of a row-block holds
+    its s-th smallest nonzero column-block; overflow beyond ``n_slots``
+    drops the largest column-blocks. This makes the fused-Pallas ELL path
+    (dense kernel output + this conversion) bit-identical to the pure-JAX
+    direct-to-ELL extraction, which the property tests assert.
+    """
+    r, c = adj.shape
+    assert r % bm == 0 and c % bn == 0
+    n_rb, n_cb = r // bm, c // bn
+    blocks = adj.reshape(n_rb, bm, n_cb, bn).transpose(0, 2, 1, 3)
+    nz = jnp.abs(blocks.astype(jnp.float32)).sum(axis=(2, 3)) > 0
+    rank = jnp.cumsum(nz, axis=1) - 1              # ascending-cb rank
+    ok = nz & (rank < n_slots)
+    slot = jnp.clip(rank, 0, n_slots - 1)
+    rb_idx = jnp.broadcast_to(jnp.arange(n_rb)[:, None], (n_rb, n_cb))
+    tiles = jnp.zeros((n_rb, n_slots, bm, bn), adj.dtype)
+    tiles = tiles.at[rb_idx, slot].add(
+        jnp.where(ok[:, :, None, None], blocks, 0), mode="drop")
+    colidx = jnp.zeros((n_rb, n_slots), jnp.int32)
+    colidx = colidx.at[rb_idx, slot].max(
+        jnp.where(ok, jnp.arange(n_cb)[None, :], 0).astype(jnp.int32),
+        mode="drop")
+    return tiles, colidx
+
+
+def ell_to_dense(tiles: jax.Array, colidx: jax.Array,
+                 n_cols: int) -> jax.Array:
+    """Densify a block-ELL matrix (reference/debug helper). Padding slots
+    (zero tiles at column-block 0) contribute nothing."""
+    n_rb, n_slots, bm, bn = tiles.shape
+    assert n_cols % bn == 0
+    out = jnp.zeros((n_rb, n_cols // bn, bm, bn), jnp.float32)
+    rb = jnp.broadcast_to(jnp.arange(n_rb)[:, None], colidx.shape)
+    out = out.at[rb, colidx].add(tiles.astype(jnp.float32))
+    return out.transpose(0, 2, 1, 3).reshape(n_rb * bm, n_cols)
+
+
 def block_density(adj: jax.Array, bm: int, bn: int) -> jax.Array:
     """Fraction of (bm, bn) blocks with any nonzero — the kernel's work
     ratio vs dense."""

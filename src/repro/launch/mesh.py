@@ -11,19 +11,16 @@ so importing this module never touches jax device state.
 """
 from __future__ import annotations
 
-import jax
+from repro.core.compat import make_mesh
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return make_mesh(shape, axes)
 
 
 def make_production_mesh_4d(*, multi_pod: bool = False):
     """ScaleGNN's 4D grid at production scale (cube 3D-PMM, §VII-C)."""
     shape = (8, 4, 4, 4) if multi_pod else (4, 4, 4, 4)
-    axes = ("d", "x", "y", "z")
-    return jax.make_mesh(
-        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * 4)
+    return make_mesh(shape, ("d", "x", "y", "z"))

@@ -7,15 +7,15 @@ assembly over a trained GCN (the serving counterpart of the 4D train loop).
 """
 from repro.serve.batcher import MicroBatch, MicroBatcher, WorkItem
 from repro.serve.assembler import (AssemblySpec, BatchPlan,
-                                   assemble_dense_block, make_spec,
-                                   make_support_pool, plan_batch)
+                                   assemble_dense_block, make_builder,
+                                   make_spec, make_support_pool, plan_batch)
 from repro.serve.cache import EmbeddingCache
 from repro.serve.engine import InferenceEngine, ServeOptions
 
 __all__ = [
     "MicroBatch", "MicroBatcher", "WorkItem",
-    "AssemblySpec", "BatchPlan", "assemble_dense_block", "make_spec",
-    "make_support_pool", "plan_batch",
+    "AssemblySpec", "BatchPlan", "assemble_dense_block", "make_builder",
+    "make_spec", "make_support_pool", "plan_batch",
     "EmbeddingCache",
     "InferenceEngine", "ServeOptions",
 ]

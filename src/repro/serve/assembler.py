@@ -23,19 +23,25 @@ support set for a given requested set is a pure function of
 communication-free ``(seed, step)`` sampling: any replica assembling the
 same micro-batch builds the identical block with zero coordination.
 
+Extraction goes through ``core.minibatch.MinibatchBuilder`` — the same
+batch-construction layer the 4D train step uses — so serving inherits every
+extraction backend for free (pure JAX, or the fused Pallas kernel via
+``make_builder(..., impl='pallas')``).
+
 Everything is static-shape: ``batch_ids`` always has exactly
 ``slots + support`` distinct vertices, so ONE jitted apply function serves
 all traffic.
 """
 from __future__ import annotations
 
-from typing import NamedTuple
+from typing import NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core import sampling as smp
+from repro.core.minibatch import MinibatchBuilder
 from repro.graphs.csr import CSRMatrix
 
 
@@ -99,15 +105,32 @@ def plan_batch(requested: np.ndarray, spec: AssemblySpec,
                      col_scale=col_scale, req_pos=req_pos, num_requested=r)
 
 
+def make_builder(spec: AssemblySpec, *, impl: str = "jax",
+                 max_row_nnz: int = 0) -> MinibatchBuilder:
+    """The serving instance of the shared batch-construction layer: one
+    'stratum' of ``total`` vertices; the per-column rescale comes from the
+    planner, not from the builder's constants."""
+    return MinibatchBuilder(
+        scfg=smp.SampleConfig(n_pad=spec.n, g=1, batch=spec.total,
+                              e_cap=spec.e_cap),
+        mode="exact", impl=impl, max_row_nnz=max_row_nnz)
+
+
 def assemble_dense_block(rp: jax.Array, ci: jax.Array, val: jax.Array,
                          batch_ids: jax.Array, col_scale: jax.Array,
-                         e_cap: int, dtype=jnp.float32) -> jax.Array:
+                         e_cap: int, dtype=jnp.float32,
+                         builder: Optional[MinibatchBuilder] = None
+                         ) -> jax.Array:
     """Extract the dense (total, total) normalized block for a planned batch.
 
-    Jit-safe (static shapes); delegates to the training extraction. The block
-    is 'diagonal' in the training sense — row and column vertex sets
-    coincide — so self-loops stay unrescaled exactly as in Eq. 24.
+    Jit-safe (static shapes); delegates to the training extraction through
+    ``MinibatchBuilder.assemble``. The block is 'diagonal' in the training
+    sense — row and column vertex sets coincide — so self-loops stay
+    unrescaled exactly as in Eq. 24.
     """
-    return smp.extract_dense_block(
-        rp, ci, val, batch_ids, batch_ids, e_cap,
-        rescale_offdiag=col_scale, is_diag_block=True, dtype=dtype)
+    if builder is None:
+        return smp.extract_dense_block(
+            rp, ci, val, batch_ids, batch_ids, e_cap,
+            rescale_offdiag=col_scale, is_diag_block=True, dtype=dtype)
+    return builder.assemble(rp, ci, val, batch_ids, col_scale,
+                            e_cap=e_cap, dtype=dtype)

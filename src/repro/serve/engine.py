@@ -49,6 +49,9 @@ class ServeOptions:
     cache_quantize: str = "int8"
     support_seed: int = 0
     replay: bool = False        # virtual clock; deterministic replays
+    # extraction backend for neighborhood assembly: "jax" (reference) or
+    # "pallas" (fused gather kernel, kernels/extract_gather.py)
+    extract_impl: str = "jax"
 
 
 class _Pending:
@@ -86,10 +89,12 @@ class InferenceEngine:
         val = jnp.asarray(A.data)
         feats = jnp.asarray(features, jnp.float32)
         e_cap_static = self.spec.e_cap
+        builder = asm.make_builder(self.spec, impl=options.extract_impl,
+                                   max_row_nnz=A.max_row_nnz())
 
         def fwd(params, batch_ids, col_scale):
-            adj = asm.assemble_dense_block(rp, ci, val, batch_ids,
-                                           col_scale, e_cap_static)
+            adj = builder.assemble(rp, ci, val, batch_ids, col_scale,
+                                   e_cap=e_cap_static)
             return M.forward(params, adj, feats[batch_ids], cfg,
                              train=False)
 

@@ -1,0 +1,274 @@
+"""Tests for the unified batch-construction layer (``core.minibatch``) and
+the fused Pallas extraction (``kernels/extract_gather.py``).
+
+The pure-JAX extraction is the reference oracle: the fused kernel must
+produce *identical* arrays (same floats, same ELL tile layout) on graphs
+without duplicate edges, where every output cell receives exactly one
+contribution and there is no accumulation-order ambiguity.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import fourd, gcn_model as M, pipeline as PL, sampling as S
+from repro.core.minibatch import (BlockFormat, GraphShards, Minibatch,
+                                  MinibatchBuilder)
+from repro.graphs import (build_partitioned_graph, csr_to_dense,
+                          make_synthetic_dataset)
+from repro.kernels.extract_gather import extract_dense_fused
+from repro.kernels.spmm_ell import (dense_to_block_ell_ranked, ell_to_dense,
+                                    spmm_ell_pallas)
+from repro.optim import AdamW
+
+
+@pytest.fixture(scope="module")
+def g1_setup():
+    """A 1-device 4D plan (g_d = g = 1): the full distributed machinery,
+    runnable on a single CPU."""
+    ds = make_synthetic_dataset(n=256, num_classes=4, d_in=16,
+                                avg_degree=8, seed=0)
+    pg = build_partitioned_graph(ds, g=1)
+    cfg = M.GCNConfig(d_in=16, d_hidden=32, num_layers=3, num_classes=4,
+                      dropout=0.0)
+    mesh = fourd.make_mesh_4d(1, 1)
+    return ds, pg, cfg, mesh
+
+
+@pytest.fixture(scope="module")
+def csr(g1_setup):
+    ds = g1_setup[0]
+    A = ds.adj_norm
+    return {
+        "rp": jnp.array(A.indptr), "ci": jnp.array(A.indices),
+        "val": jnp.array(A.data), "n": A.n_rows,
+        "max_deg": A.max_row_nnz(), "dense": csr_to_dense(A),
+    }
+
+
+# ---------------------------------------------------------------------------
+# GraphShards / Minibatch pytrees
+# ---------------------------------------------------------------------------
+
+def test_graph_shards_pytree_roundtrip(g1_setup):
+    ds, pg, cfg, mesh = g1_setup
+    plan = fourd.build_plan(pg, cfg, mesh, batch=64)
+    shards = GraphShards.from_graph(plan.shard_graph(pg))
+    leaves, treedef = jax.tree.flatten(shards)
+    assert len(leaves) == 9                      # 3 planes x (rp, ci, val)
+    rebuilt = jax.tree.unflatten(treedef, leaves)
+    assert isinstance(rebuilt, GraphShards)
+    for li in range(3):
+        for a, b in zip(shards.plane(li), rebuilt.plane(li)):
+            assert a is b
+    # plane rotation is mod-3: layer 4 reuses plane 1
+    assert shards.plane(4)[0] is shards.plane(1)[0]
+    # the spec pytree mirrors the data pytree's structure (PartitionSpec is
+    # itself a tuple-pytree, so flatten with it as a leaf)
+    from jax.sharding import PartitionSpec
+    specs = GraphShards.specs(plan.data_specs)
+    assert (jax.tree.structure(
+                specs, is_leaf=lambda x: isinstance(x, PartitionSpec))
+            == jax.tree.structure(shards))
+
+
+def test_minibatch_leading_dim_helpers():
+    mb = Minibatch(adj=(jnp.ones((4, 4)),), feats=jnp.ones((4, 2)),
+                   labels=jnp.zeros((4,), jnp.int32))
+    up = mb.add_leading()
+    assert up.adj[0].shape == (1, 4, 4) and up.labels.shape == (1, 4)
+    down = up.strip_leading()
+    assert jax.tree.all(jax.tree.map(jnp.array_equal, mb, down))
+
+
+# ---------------------------------------------------------------------------
+# Fused Pallas extraction == pure-JAX oracle (the tentpole property)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("diag", [True, False])
+@pytest.mark.parametrize("scale_kind", ["scalar", "per_column"])
+def test_fused_extraction_bitmatches_dense_oracle(csr, diag, scale_kind):
+    rng = np.random.default_rng(7)
+    rp, ci, val = csr["rp"], csr["ci"], csr["val"]
+    n, md = csr["n"], csr["max_deg"]
+    if diag:
+        rows = cols = jnp.array(
+            np.sort(rng.choice(n, 64, replace=False)).astype(np.int32))
+    else:
+        rows = jnp.array(
+            np.sort(rng.choice(n, 48, replace=False)).astype(np.int32))
+        cols = jnp.array(
+            np.sort(rng.choice(n, 32, replace=False)).astype(np.int32))
+    b_c = cols.shape[0]
+    scale = (2.75 if scale_kind == "scalar" else
+             jnp.array(rng.uniform(0.5, 3.0, b_c).astype(np.float32)))
+    e_cap = rows.shape[0] * md
+    ref = S.extract_dense_block(rp, ci, val, rows, cols, e_cap,
+                                rescale_offdiag=scale, is_diag_block=diag)
+    got = extract_dense_fused(rp, ci, val, rows, cols, col_scale=scale,
+                              diag=diag, max_deg=md)
+    assert np.array_equal(np.array(ref), np.array(got))
+
+
+def test_fused_extraction_bitmatches_ell_oracle(csr):
+    """ELL format: fused dense kernel + rank-preserving conversion must
+    reproduce the direct-to-ELL extraction's tiles AND colidx exactly."""
+    rng = np.random.default_rng(3)
+    rp, ci, val = csr["rp"], csr["ci"], csr["val"]
+    n, md = csr["n"], csr["max_deg"]
+    s = jnp.array(np.sort(rng.choice(n, 64, replace=False)).astype(np.int32))
+    e_cap = 64 * md
+    tiles_ref, colidx_ref = S.extract_block_ell(
+        rp, ci, val, s, s, e_cap, rescale_offdiag=1.9, is_diag_block=True,
+        bm=16, bn=16, n_slots=4)
+    dense = extract_dense_fused(rp, ci, val, s, s, col_scale=1.9,
+                                diag=True, max_deg=md)
+    tiles, colidx = dense_to_block_ell_ranked(dense, 16, 16, 4)
+    assert np.array_equal(np.array(colidx_ref), np.array(colidx))
+    assert np.array_equal(np.array(tiles_ref), np.array(tiles))
+    # and both densify back to the dense extraction
+    assert np.array_equal(np.array(ell_to_dense(tiles, colidx, 64)),
+                          np.array(dense))
+
+
+def test_builder_backends_agree_all_formats(csr):
+    """The four (fmt x impl) builder configurations produce the same
+    mathematical block."""
+    rng = np.random.default_rng(5)
+    n, md = csr["n"], csr["max_deg"]
+    s = jnp.array(np.sort(rng.choice(n, 64, replace=False)).astype(np.int32))
+    scfg = S.SampleConfig(n_pad=n, g=1, batch=64, e_cap=64 * md)
+    outs = {}
+    for fmt in (BlockFormat.DENSE, BlockFormat.ELL):
+        for impl in ("jax", "pallas"):
+            b = MinibatchBuilder(scfg=scfg, mode="exact", fmt=fmt,
+                                 impl=impl, ell_tile=16, ell_slots=4,
+                                 max_row_nnz=md)
+            out = b.extract_block(csr["rp"], csr["ci"], csr["val"], s, s,
+                                  col_scale=1.5, diag=True)
+            if fmt is BlockFormat.ELL:
+                out = ell_to_dense(out[0], out[1], 64)
+            outs[(fmt, impl)] = np.array(out)
+    base = outs[(BlockFormat.DENSE, "jax")]
+    for k, v in outs.items():
+        assert np.array_equal(base, v), k
+
+
+def test_ell_spmm_consistent_with_dense_block(csr):
+    """extract-to-ELL -> Pallas SpMM == dense extraction @ X."""
+    rng = np.random.default_rng(11)
+    n, md = csr["n"], csr["max_deg"]
+    s = jnp.array(np.sort(rng.choice(n, 64, replace=False)).astype(np.int32))
+    e_cap = 64 * md
+    dense = S.extract_dense_block(csr["rp"], csr["ci"], csr["val"], s, s,
+                                  e_cap, rescale_offdiag=2.0,
+                                  is_diag_block=True)
+    tiles, colidx = S.extract_block_ell(
+        csr["rp"], csr["ci"], csr["val"], s, s, e_cap, rescale_offdiag=2.0,
+        is_diag_block=True, bm=16, bn=16, n_slots=8)
+    x = jnp.array(rng.normal(size=(64, 16)).astype(np.float32))
+    np.testing.assert_allclose(np.array(spmm_ell_pallas(tiles, colidx, x)),
+                               np.array(dense @ x), rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# The unified 4D path at g = 1 (runs on one CPU device)
+# ---------------------------------------------------------------------------
+
+def test_fourd_loss_matches_single_device_oracle(g1_setup):
+    ds, pg, cfg, mesh = g1_setup
+    plan = fourd.build_plan(pg, cfg, mesh, batch=64)
+    params = plan.shard_params(M.init_params(jax.random.PRNGKey(1), cfg))
+    graph = plan.shard_graph(pg)
+    loss = jax.jit(fourd.make_loss_fn(plan, train=True))(
+        params, graph, jnp.asarray(0))
+    A = ds.adj_norm
+    mb = S.make_minibatch_stratified(
+        S.step_key(0, jnp.asarray(0), 0), jnp.array(A.indptr),
+        jnp.array(A.indices), jnp.array(A.data), jnp.array(pg.features),
+        jnp.array(pg.labels), plan.scfg)
+    ref_params = M.init_params(jax.random.PRNGKey(1), cfg)
+    logits = M.forward(ref_params, mb.adj, mb.feats, cfg, train=False)
+    ref = float(M.cross_entropy_loss(logits, mb.labels))
+    assert abs(float(loss[0]) - ref) < 1e-4
+
+
+@pytest.mark.parametrize("opts_kw", [
+    dict(extract_impl="pallas"),
+    dict(extract_impl="pallas", spmm_impl="ell", ell_tile=16, ell_slots=16),
+    dict(spmm_impl="ell", ell_tile=16, ell_slots=16),
+])
+def test_fourd_loss_invariant_to_extraction_backend(g1_setup, opts_kw):
+    """Acceptance: every extraction backend/format reproduces the reference
+    4D loss through the one unified builder path."""
+    ds, pg, cfg, mesh = g1_setup
+    plan = fourd.build_plan(pg, cfg, mesh, batch=64)
+    params = plan.shard_params(M.init_params(jax.random.PRNGKey(1), cfg))
+    graph = plan.shard_graph(pg)
+    l_ref = jax.jit(fourd.make_loss_fn(plan, train=False))(
+        params, graph, jnp.asarray(0))
+    plan2 = fourd.build_plan(pg, cfg, mesh, batch=64,
+                             opts=fourd.TrainOptions(**opts_kw))
+    l_got = jax.jit(fourd.make_loss_fn(plan2, train=False))(
+        params, graph, jnp.asarray(0))
+    np.testing.assert_allclose(np.array(l_got), np.array(l_ref), rtol=1e-5)
+
+
+def test_prefetch_pipeline_matches_unpipelined_losses(g1_setup):
+    """Acceptance: the §V-A prefetched pipeline (now carrying a Minibatch
+    pytree) still reproduces the unpipelined loss sequence exactly."""
+    ds, pg, cfg, mesh = g1_setup
+    plan = fourd.build_plan(pg, cfg, mesh, batch=64)
+    params = plan.shard_params(M.init_params(jax.random.PRNGKey(1), cfg))
+    graph = plan.shard_graph(pg)
+    opt = AdamW(lr=5e-3)
+    opt_state = opt.init(params)
+    ts = fourd.make_train_step(plan, opt)
+    p0, o0, ref = params, opt_state, []
+    for s in range(4):
+        p0, o0, l = ts(p0, o0, graph, jnp.asarray(s))
+        ref.append(float(l))
+    sample_fn, step_fn = PL.make_prefetched_train_step(plan, opt)
+    state = PL.PrefetchState(params, opt_state,
+                             sample_fn(graph, jnp.asarray(0)))
+    assert isinstance(state.minibatch, Minibatch)
+    got = []
+    for s in range(4):
+        state, l = step_fn(state, graph, jnp.asarray(s))
+        got.append(float(l))
+    np.testing.assert_allclose(ref, got, rtol=1e-5)
+
+
+def test_prefetch_rejects_ell_format(g1_setup):
+    ds, pg, cfg, mesh = g1_setup
+    plan = fourd.build_plan(pg, cfg, mesh, batch=64,
+                            opts=fourd.TrainOptions(spmm_impl="ell",
+                                                    ell_tile=16))
+    with pytest.raises(NotImplementedError):
+        PL.make_prefetched_train_step(plan, AdamW(lr=1e-3))
+
+
+def test_builder_requires_row_bound_for_pallas():
+    scfg = S.SampleConfig(n_pad=64, g=1, batch=8, e_cap=8)
+    with pytest.raises(AssertionError):
+        MinibatchBuilder(scfg=scfg, impl="pallas")       # no max_row_nnz
+
+
+def test_builder_exact_mode_matches_reference_oracle(csr):
+    """Sampling-mode dispatch: builder exact mode == make_minibatch_exact."""
+    n, md = csr["n"], csr["max_deg"]
+    feats = jnp.array(np.random.default_rng(0).normal(
+        size=(n, 8)).astype(np.float32))
+    labels = jnp.zeros((n,), jnp.int32)
+    scfg = S.SampleConfig(n_pad=n, g=1, batch=32, e_cap=32 * md)
+    b = MinibatchBuilder(scfg=scfg, mode="exact")
+    key = jax.random.PRNGKey(9)
+    mine = b.build_single(key, csr["rp"], csr["ci"], csr["val"], feats,
+                          labels)
+    ref = S.make_minibatch_exact(key, csr["rp"], csr["ci"], csr["val"],
+                                 feats, labels, n, 32, 32 * md)
+    assert np.array_equal(np.array(mine.vertex_ids), np.array(ref.vertex_ids))
+    np.testing.assert_allclose(np.array(mine.adj), np.array(ref.adj),
+                               rtol=1e-6)
+    assert np.array_equal(np.array(mine.feats), np.array(ref.feats))

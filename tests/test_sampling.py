@@ -98,6 +98,38 @@ def test_stratified_matches_dense_with_pairwise_constants(graph):
     assert np.allclose(np.array(mb.adj), ref, atol=1e-4)
 
 
+def test_rescale_constants_g1_equal_exact_path(graph):
+    """Satellite coverage: at g = 1 the stratified sampler IS the paper's
+    exact scheme — both rescale constants must collapse to Eq. 23's
+    (n-1)/(B-1), and a stratified extraction of a given vertex set must
+    equal the exact extraction bit-for-bit."""
+    n, B = graph["n"], 96
+    cfg = S.SampleConfig(n_pad=n, g=1, batch=B, e_cap=B * graph["max_nnz"])
+    inv_same, inv_cross = S.rescale_constants(cfg)
+    assert np.isclose(inv_same, (n - 1) / (B - 1))
+    # the cross-range constant is never used at g = 1 (there is one range);
+    # its value is n/B by construction
+    assert np.isclose(inv_cross, n / B)
+
+    s = jnp.array(np.sort(np.random.default_rng(0).choice(
+        n, B, replace=False)).astype(np.int32))
+    exact = S.extract_dense_block(
+        graph["rp"], graph["ci"], graph["val"], s, s, cfg.e_cap,
+        rescale_offdiag=(n - 1) / (B - 1), is_diag_block=True)
+    strat = S.extract_dense_block_stratified(
+        graph["rp"], graph["ci"], graph["val"], s, s, cfg.e_cap,
+        row_range=jnp.asarray(0), col_range=jnp.asarray(0),
+        inv_same=inv_same, inv_cross=inv_cross)
+    assert np.array_equal(np.array(exact), np.array(strat))
+
+
+def test_stratified_col_scale_selects_pairwise_constant():
+    sc = S.stratified_col_scale(jnp.asarray(1), jnp.asarray(1), 5.0, 7.0)
+    assert float(sc) == 5.0
+    sc = S.stratified_col_scale(jnp.asarray(0), jnp.asarray(2), 5.0, 7.0)
+    assert float(sc) == 7.0
+
+
 @pytest.mark.parametrize("mode", ["exact", "stratified"])
 def test_unbiased_aggregation(graph, mode):
     """Eq. 25: E[sum_u ã_vu x_u | v in S] == full-graph aggregation.

@@ -105,6 +105,64 @@ def test_assembler_partial_support_scales(tiny_ds):
     np.testing.assert_allclose(adj, expect, rtol=1e-6)
 
 
+def test_assembler_per_column_rescale_exact_at_p1(tiny_ds):
+    """Satellite coverage for the PR-1 per-column rescale: when the support
+    set is V \\ R, every support column has inclusion probability 1, so the
+    planner must emit col_scale == 1 everywhere (requested AND support) and
+    the assembled block must equal the unrescaled dense submatrix exactly —
+    the requested-vs-support distinction changes nothing at p = 1."""
+    A = tiny_ds.adj_norm
+    n = A.n_rows
+    req = np.array([5, 12, 40])
+    spec = make_spec(A, slots=4, support=n - 4)        # need = n - r at r<=4
+    pool = make_support_pool(n, seed=2)
+    plan = plan_batch(req, spec, pool)
+    r = plan.num_requested
+    need = spec.total - r
+    assert (n - r) / need == 1.0                       # p_support == 1
+    is_req = np.isin(plan.batch_ids, req)
+    assert is_req.sum() == r and (~is_req).sum() == need
+    np.testing.assert_array_equal(plan.col_scale, 1.0)
+    adj = np.asarray(assemble_dense_block(
+        jnp.asarray(A.indptr), jnp.asarray(A.indices), jnp.asarray(A.data),
+        jnp.asarray(plan.batch_ids), jnp.asarray(plan.col_scale),
+        spec.e_cap))
+    dense = csr_to_dense(A)
+    np.testing.assert_allclose(
+        adj, dense[np.ix_(plan.batch_ids, plan.batch_ids)], atol=0)
+
+
+def test_assembler_pallas_backend_matches_jax(tiny_ds):
+    """The fused-extraction serving backend is bit-identical to the
+    reference on the per-column rescale path."""
+    from repro.serve.assembler import make_builder
+    A = tiny_ds.adj_norm
+    spec = make_spec(A, slots=4, support=20)
+    pool = make_support_pool(A.n_rows, seed=1)
+    plan = plan_batch(np.array([7, 2, 33]), spec, pool)
+    rp, ci, val = (jnp.asarray(A.indptr), jnp.asarray(A.indices),
+                   jnp.asarray(A.data))
+    ids, cs = jnp.asarray(plan.batch_ids), jnp.asarray(plan.col_scale)
+    ref = assemble_dense_block(rp, ci, val, ids, cs, spec.e_cap)
+    b = make_builder(spec, impl="pallas", max_row_nnz=A.max_row_nnz())
+    got = b.assemble(rp, ci, val, ids, cs)
+    assert np.array_equal(np.array(ref), np.array(got))
+
+
+def test_engine_pallas_extraction_matches_reference(served):
+    """End to end: an engine on the fused Pallas assembly path serves the
+    same logits as the reference-forward oracle."""
+    ds, cfg, params = served
+    eng = InferenceEngine(params, cfg, ds.adj_norm, ds.features,
+                          ServeOptions(slots=8, support=120,
+                                       extract_impl="pallas"))
+    out = eng.predict([5, 77, 11])
+    dense = jnp.asarray(csr_to_dense(ds.adj_norm))
+    ref = np.asarray(M.forward(params, dense, jnp.asarray(ds.features),
+                               cfg, train=False))
+    np.testing.assert_allclose(out, ref[[5, 77, 11]], atol=1e-5)
+
+
 def test_assembler_support_is_deterministic(tiny_ds):
     A = tiny_ds.adj_norm
     spec = make_spec(A, slots=4, support=16)

@@ -1,7 +1,31 @@
 #!/usr/bin/env bash
 # Tier-1 verification: the ROADMAP.md gate every PR must keep green.
 #   ./tier1.sh            # whole suite, stop at first failure
+#   ./tier1.sh --fast     # deselect slow-marked tests (subprocess spawns)
 #   ./tier1.sh -k serve   # extra pytest args pass through
+#
+# A pytest collection error (import failure, bad marker, syntax error)
+# exits non-zero here even when zero tests ran: the collect-only pre-pass
+# catches the class of red-by-collection bugs that `pytest -x` alone can
+# mask when combined with filters that select nothing.
 set -euo pipefail
 cd "$(dirname "$0")"
-PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} exec python -m pytest -x -q "$@"
+export PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH}
+
+ARGS=()
+for a in "$@"; do
+  case "$a" in
+    --fast) ARGS+=(-m "not slow") ;;
+    *)      ARGS+=("$a") ;;
+  esac
+done
+
+# collection must be clean before anything runs (exit 2/3/4 propagate);
+# on failure, re-show the report that the quiet pass swallowed
+if ! python -m pytest --collect-only -q >/dev/null 2>&1; then
+  echo "tier1: pytest collection failed —" >&2
+  python -m pytest --collect-only -q
+  exit 1
+fi
+
+exec python -m pytest -x -q --durations=10 ${ARGS[@]+"${ARGS[@]}"}
