@@ -13,7 +13,10 @@ import sys
 import textwrap
 
 CHILD = """
-import time, jax, jax.numpy as jnp
+import time
+
+import jax
+import jax.numpy as jnp
 from repro.core import fourd, gcn_model as GM
 from repro.graphs import build_partitioned_graph, make_synthetic_dataset
 from repro.optim import AdamW

@@ -9,7 +9,6 @@ EXPERIMENTS.md.
 """
 from __future__ import annotations
 
-import json
 import os
 
 from repro.configs import INPUT_SHAPES, get_config

@@ -32,8 +32,9 @@ BENCHMARKS = [
      "Pallas kernels: block-ELL SpMM + fused tail vs jnp reference"),
     ("benchmarks.extract_bench", 1,
      "Extraction: dense vs block-ELL vs Pallas fused at gcn_paper sizes"),
-    ("benchmarks.serve_bench", 1,
-     "Serving: p50/p99 latency + req/s — naive vs micro-batched vs +cache"),
+    ("benchmarks.serve_bench", 8,
+     "Serving: p50/p99 latency + req/s — naive vs micro-batched vs +cache "
+     "vs (2,2,2)-mesh sharded"),
     ("benchmarks.ablation_sampling_modes", 1,
      "Ablation: exact vs stratified sampling vs no-rescale control"),
     ("benchmarks.roofline_report", 0,
@@ -47,12 +48,22 @@ def main() -> None:
                     help="substring filters on module names")
     ap.add_argument("--list", action="store_true",
                     help="print the registered benchmarks and exit")
+    ap.add_argument("--check-imports", action="store_true",
+                    help="import every registered module and exit (the CI "
+                         "bench-smoke guard against unimportable rot)")
     args = ap.parse_args()
 
     if args.list:
         for module, n_dev, desc in BENCHMARKS:
             dev = f"{n_dev} dev" if n_dev else "sub-runs"
             print(f"{module:40s} [{dev:8s}] {desc}")
+        return
+
+    if args.check_imports:
+        import importlib
+        for module, _, _ in BENCHMARKS:
+            importlib.import_module(module)
+            print(f"import ok: {module}")
         return
 
     repo = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))

@@ -1,6 +1,8 @@
 """Serving benchmark: p50/p99 latency and req/s for three inference modes —
 naive per-request, micro-batched, and micro-batched + embedding cache — over
-a Zipfian single-vertex request stream on a synthetic graph.
+a Zipfian single-vertex request stream on a synthetic graph; with >= 8
+devices, a fourth mode serves the same stream sharded over a (2, 2, 2) PMM
+mesh (serve/distributed.py) for the sharded-vs-single-device comparison.
 
 Self-contained so both invocations work:
 
@@ -92,6 +94,23 @@ def main() -> None:
     if args.smoke:
         assert speedup >= 2.0, (
             f"micro-batched throughput only {speedup:.2f}x naive (need 2x)")
+
+    # sharded vs single-device: the same micro-batched stream over the
+    # (2, 2, 2) PMM mesh. On emulated host devices this measures dispatch
+    # overhead, not speedup — the point is exercising (and timing) the real
+    # multi-host code path; on accelerators the grid carries the block.
+    if jax.device_count() >= 8:
+        sharded = run_mode(
+            "microbatch_mesh222", params, cfg, ds,
+            ServeOptions(micro_batch=True, mesh_shape=(2, 2, 2), **common),
+            stream)
+        ratio = sharded["rps"] / micro["rps"]
+        print(f"# sharded (2,2,2) vs single-device micro-batched: "
+              f"{ratio:.2f}x req/s on {jax.default_backend()}", flush=True)
+    else:
+        print(f"# sharded comparison skipped: {jax.device_count()} device(s)"
+              " < 8 (run under run.py or with XLA_FLAGS="
+              "--xla_force_host_platform_device_count=8)", flush=True)
 
 
 if __name__ == "__main__":

@@ -14,7 +14,6 @@ from benchmarks.common import csv, time_fn
 from repro.core import baselines as BL
 from repro.core import fourd, gcn_model as M
 from repro.graphs import build_partitioned_graph, make_synthetic_dataset
-from repro.optim import AdamW
 
 
 def main():

@@ -13,7 +13,7 @@ can be enabled or disabled without changing the parallelization strategy").
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Dict, Optional, Sequence
+from typing import Any, Dict, Optional
 
 import jax
 import jax.numpy as jnp

@@ -257,6 +257,39 @@ class MinibatchBuilder:
 
     # -- the distributed path (inside shard_map) -----------------------------
 
+    def extract_plane_blocks(self, shards: GraphShards, ids2d: jax.Array,
+                             num_layers: int, *, col_scale_fn,
+                             fmt: Optional[BlockFormat] = None
+                             ) -> Tuple[Any, ...]:
+        """The rotation-plane extraction loop shared by training
+        (``build_local``) and the shard_map'd serving step
+        (``serve/distributed.py``): for each of the first ``min(3,
+        num_layers)`` planes, this device extracts its (i, j) block of the
+        batch adjacency — ``ids2d`` is the (g, b) per-range global vertex
+        ids, i/j the device's row/col vertex-range coords on that plane.
+        ``col_scale_fn(i, j)`` supplies the off-diagonal rescale (a traced
+        scalar, or a (b,) per-column vector for serving)."""
+        n_loc = self.scfg.n_local
+        st = pmm3d.initial_state()
+        blocks = []
+        for li in range(min(3, num_layers)):
+            pr, pc = st.adj_plane                    # (p, r)
+            i = jax.lax.axis_index(pr)               # row vertex range
+            j = jax.lax.axis_index(pc)               # col vertex range
+            rp, ci, val = shards.plane(li)
+            blocks.append(self.extract_block(
+                rp, ci, val, ids2d[i] - i * n_loc, ids2d[j] - j * n_loc,
+                col_scale=col_scale_fn(i, j), diag=i == j, fmt=fmt))
+            st = st.rotate()
+        return tuple(blocks)
+
+    def local_rows(self, rows_global: jax.Array, ids2d: jax.Array,
+                   axis: str) -> jax.Array:
+        """This device's slice of per-vertex rows (features/labels) sharded
+        over mesh axis ``axis``: the rows of its range's batch vertices."""
+        i = jax.lax.axis_index(axis)
+        return rows_global[ids2d[i] - i * self.scfg.n_local]
+
     def build_local(self, shards: GraphShards, feats_loc: jax.Array,
                     labels_loc: jax.Array, step: jax.Array,
                     num_layers: int, *, dp_axis: str = "d") -> Minibatch:
@@ -270,30 +303,16 @@ class MinibatchBuilder:
         key = smp.step_key(self.seed, step, jax.lax.axis_index(dp_axis))
         s2d = self.sample(key)                       # (g, b) global ids
         inv_same, inv_cross = self.rescale_constants()
-        n_loc = self.scfg.n_local
-
-        st = pmm3d.initial_state()
-        blocks = []
-        for li in range(min(3, num_layers)):
-            pr, pc = st.adj_plane                    # (p, r)
-            i = jax.lax.axis_index(pr)               # row vertex range
-            j = jax.lax.axis_index(pc)               # col vertex range
-            rp, ci, val = shards.plane(li)
-            blocks.append(self.extract_block(
-                rp, ci, val, s2d[i] - i * n_loc, s2d[j] - j * n_loc,
-                col_scale=smp.stratified_col_scale(i, j, inv_same,
-                                                   inv_cross),
-                diag=i == j))
-            st = st.rotate()
-
+        blocks = self.extract_plane_blocks(
+            shards, s2d, num_layers,
+            col_scale_fn=lambda i, j: smp.stratified_col_scale(
+                i, j, inv_same, inv_cross))
         # features on plane (x, z): rows = sample of range x_coord
-        ix = jax.lax.axis_index("x")
-        x_local = feats_loc[s2d[ix] - ix * n_loc]
+        x_local = self.local_rows(feats_loc, s2d, "x")
         # labels sharded over the final row axis
         r_f = pmm3d.state_after_layers(num_layers).row
-        il = jax.lax.axis_index(r_f)
-        y_local = labels_loc[s2d[il] - il * n_loc]
-        return Minibatch(adj=tuple(blocks), feats=x_local, labels=y_local)
+        y_local = self.local_rows(labels_loc, s2d, r_f)
+        return Minibatch(adj=blocks, feats=x_local, labels=y_local)
 
     # -- the single-device path (oracles, baselines, ablations) --------------
 

@@ -45,18 +45,25 @@ class PrefetchState:
 
 def _minibatch_specs(plan: FourDPlan) -> Minibatch:
     """Sharding specs of the carried mini-batch (device-local blocks live in
-    stacked global arrays), as a ``Minibatch``-shaped spec pytree."""
-    if plan.builder.fmt is not BlockFormat.DENSE:
-        raise NotImplementedError(
-            "prefetched pipeline carries dense blocks; block-ELL prefetch "
-            "needs per-leaf tile specs")
+    stacked global arrays), as a ``Minibatch``-shaped spec pytree.
+
+    Per-leaf: a dense plane is one (1, b, b) array; a block-ELL plane is a
+    (tiles, colidx) pair — (1, n_rb, n_slots, bm, bn) and (1, n_rb,
+    n_slots). Both carry the same ``P('d', plane_row, plane_col)`` spec:
+    the carried arrays are pure round-trip carriers between the sampling
+    shard_map's out_specs and the loss shard_map's in_specs, so any spec
+    that names every axis the leaf varies over (d and the two plane axes —
+    blocks are replicated over the third) reassembles identically,
+    regardless of which tensor dims the plane axes land on."""
     st = pmm3d.initial_state()
+    ell = plan.builder.fmt is BlockFormat.ELL
     adj_specs = []
     for _ in range(min(3, plan.cfg.num_layers)):
         pr, pc = st.adj_plane
         # leading 'd': DP groups sample independent mini-batches (§IV-A),
         # so the blocks are NOT replicated across d
-        adj_specs.append(P("d", pr, pc))
+        sp = P("d", pr, pc)
+        adj_specs.append((sp, sp) if ell else sp)
         st = st.rotate()
     r_f = pmm3d.state_after_layers(plan.cfg.num_layers).row
     return Minibatch(adj=tuple(adj_specs), feats=P("d", "x", "z"),

@@ -27,7 +27,7 @@ optimized — a §Perf hillclimb in EXPERIMENTS.md).
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Sequence, Tuple
+from typing import Sequence, Tuple
 
 import jax
 import jax.numpy as jnp

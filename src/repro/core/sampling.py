@@ -30,7 +30,6 @@ wants dense tiles, and a mini-batch block is small (DESIGN.md §3).
 """
 from __future__ import annotations
 
-import functools
 from typing import NamedTuple, Tuple
 
 import jax

@@ -17,7 +17,7 @@ accuracy comparisons (paper Table I / Fig. 6) are meaningful:
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Tuple
+from typing import Tuple
 
 import numpy as np
 

@@ -12,3 +12,5 @@
 ``ref``  — pure-jnp oracles used by the allclose test sweeps
 """
 from repro.kernels import ops, ref
+
+__all__ = ["ops", "ref"]

@@ -19,7 +19,7 @@ import json
 import re
 import time
 import traceback
-from typing import Any, Dict, Optional
+from typing import Any, Dict
 
 import jax
 import jax.numpy as jnp
@@ -336,7 +336,7 @@ def _save(rec, save):
 def run_gnn_dryrun(multi_pod: bool, save: bool = True) -> Dict[str, Any]:
     """Dry-run the paper's own 4D GNN train step at production scale, at
     ogbn-papers100M-like dimensions (batch 131072, d_in 128, d_h 256, 3L)."""
-    from repro.core import fourd, gcn_model as GM, sampling as smp
+    from repro.core import fourd, gcn_model as GM
     from repro.graphs.partition import PartitionedGraph
 
     mesh = make_production_mesh_4d(multi_pod=multi_pod)

@@ -24,3 +24,13 @@ def make_production_mesh_4d(*, multi_pod: bool = False):
     """ScaleGNN's 4D grid at production scale (cube 3D-PMM, §VII-C)."""
     shape = (8, 4, 4, 4) if multi_pod else (4, 4, 4, 4)
     return make_mesh(shape, ("d", "x", "y", "z"))
+
+
+def make_production_serve_mesh(*, multi_pod: bool = False):
+    """Serving mesh at production scale (serve/distributed.py): a small
+    (2, 2, 2) PMM cube per replica group — one serving micro-batch is tiny
+    next to a training batch, so latency favors a shallow grid — with the
+    remaining chips as stacked-micro-batch data groups (`d`): 32 groups
+    single-pod (256 chips), 64 across two pods."""
+    shape = (64, 2, 2, 2) if multi_pod else (32, 2, 2, 2)
+    return make_mesh(shape, ("d", "x", "y", "z"))

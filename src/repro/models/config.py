@@ -8,7 +8,7 @@ source paper / model card.
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Tuple
+from typing import Optional
 
 import jax.numpy as jnp
 

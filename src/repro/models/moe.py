@@ -13,8 +13,7 @@ load-balancing loss from the Switch/Mixtral recipe.
 """
 from __future__ import annotations
 
-import functools
-from typing import Optional, Tuple
+from typing import Tuple
 
 import jax
 import jax.numpy as jnp

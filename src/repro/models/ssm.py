@@ -15,7 +15,6 @@ Decode keeps (conv_state, ssm_state) and advances both in O(1).
 """
 from __future__ import annotations
 
-import functools
 from typing import Optional, Tuple
 
 import jax

@@ -22,7 +22,6 @@ from __future__ import annotations
 
 import contextlib
 import dataclasses
-import functools
 from typing import Any, Dict, Optional, Tuple
 
 import jax

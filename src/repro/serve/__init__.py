@@ -6,16 +6,21 @@ assembly over a trained GCN (the serving counterpart of the 4D train loop).
     logits = engine.predict([17, 42, 1001])
 """
 from repro.serve.batcher import MicroBatch, MicroBatcher, WorkItem
-from repro.serve.assembler import (AssemblySpec, BatchPlan,
+from repro.serve.assembler import (AssemblySpec, BatchPlan, ShardedBatchPlan,
                                    assemble_dense_block, make_builder,
-                                   make_spec, make_support_pool, plan_batch)
+                                   make_spec, make_support_pool,
+                                   make_support_pools, plan_batch,
+                                   plan_batch_ranges)
 from repro.serve.cache import EmbeddingCache
+from repro.serve.driver import ServingDriver
 from repro.serve.engine import InferenceEngine, ServeOptions
 
 __all__ = [
     "MicroBatch", "MicroBatcher", "WorkItem",
-    "AssemblySpec", "BatchPlan", "assemble_dense_block", "make_builder",
-    "make_spec", "make_support_pool", "plan_batch",
-    "EmbeddingCache",
+    "AssemblySpec", "BatchPlan", "ShardedBatchPlan",
+    "assemble_dense_block", "make_builder", "make_spec",
+    "make_support_pool", "make_support_pools", "plan_batch",
+    "plan_batch_ranges",
+    "EmbeddingCache", "ServingDriver",
     "InferenceEngine", "ServeOptions",
 ]

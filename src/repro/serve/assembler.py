@@ -105,6 +105,95 @@ def plan_batch(requested: np.ndarray, spec: AssemblySpec,
                      col_scale=col_scale, req_pos=req_pos, num_requested=r)
 
 
+def make_support_pools(n: int, n_pad: int, g: int, seed: int = 0,
+                       min_size: int = 0) -> list[np.ndarray]:
+    """Per-vertex-range support streams for the mesh-sharded planner.
+
+    Range ``i`` covers padded ids ``[i * n_local, (i+1) * n_local)``; its pool
+    is a fixed permutation of the range's *true* vertices (ghosts past ``n``
+    supply no neighborhood and are never drawn). With ``g = 1`` the single
+    pool is bit-identical to ``make_support_pool(n, seed)`` — the sharded
+    planner degenerates to the single-device one.
+
+    ``min_size`` is the per-range batch capacity (``total / g``): a range
+    whose true-vertex count is below it could never fill its slots, so the
+    configuration is rejected here, at construction, rather than on the
+    first request that hits the short range.
+    """
+    assert n_pad % g == 0 and n_pad >= n
+    n_local = n_pad // g
+    rng = np.random.default_rng(seed)
+    pools = []
+    for i in range(g):
+        lo, hi = i * n_local, min((i + 1) * n_local, n)
+        assert hi - lo >= max(min_size, 1), (
+            f"vertex range {i} holds {max(hi - lo, 0)} true vertices < the "
+            f"{min_size} batch slots it must fill (n={n}, g={g}) — shrink "
+            "the batch or the grid")
+        pools.append((rng.permutation(hi - lo) + lo).astype(np.int32))
+    return pools
+
+
+class ShardedBatchPlan(NamedTuple):
+    """Host-side plan of one micro-batch stratified over g vertex ranges —
+    the input of the ``serve/distributed.py`` shard_map'd step. Flattening
+    ``batch_ids`` row-major gives a globally sorted id list (ranges are
+    contiguous and ascending), so ``req_pos`` indexes the flat order exactly
+    like :class:`BatchPlan`."""
+
+    batch_ids: np.ndarray   # (g, total/g) int32 global ids, sorted per range
+    col_scale: np.ndarray   # (g, total/g) float32 per-column rescale
+    req_pos: np.ndarray     # (k,) flat position of each requested vertex
+    num_requested: int      # |unique requested|
+
+
+def plan_batch_ranges(requested: np.ndarray, spec: AssemblySpec,
+                      pools: list[np.ndarray], n_pad: int
+                      ) -> ShardedBatchPlan:
+    """Stratified serving plan: exactly ``total/g`` batch vertices per vertex
+    range, so every mesh device extracts a static-shape block.
+
+    The two-stratum rescale of :func:`plan_batch` becomes per-range: within
+    range ``i`` holding ``r_i`` requested vertices, the ``need_i`` support
+    columns are a uniform subset of the range's remaining ``n_i - r_i`` true
+    vertices, so their unbiased scale is ``(n_i - r_i) / need_i``. At
+    ``g = 1`` this is bit-identical to :func:`plan_batch`.
+    """
+    g = len(pools)
+    assert spec.total % g == 0, (spec.total, g)
+    b_loc = spec.total // g
+    assert spec.slots <= b_loc, (
+        f"slots={spec.slots} can overflow one range (capacity {b_loc}); "
+        "raise support so total/g >= slots")
+    n_local = n_pad // g
+    requested = np.asarray(requested, np.int64)
+    assert requested.size <= spec.slots, "micro-batch overflow"
+    uniq = np.unique(requested)
+    rows_ids, rows_scale = [], []
+    for i in range(g):
+        lo = i * n_local
+        in_range = uniq[(uniq >= lo) & (uniq < lo + n_local)]
+        r_i = int(in_range.size)
+        need = b_loc - r_i
+        pool = pools[i]
+        assert need <= pool.size - r_i, (
+            f"range {i}: need {need} support from {pool.size - r_i} free "
+            "vertices — shrink the batch or the grid")
+        cand = pool[:r_i + need]
+        fill = cand[~np.isin(cand, in_range)][:need]
+        ids = np.sort(np.concatenate([in_range, fill.astype(np.int64)]))
+        inv_p = (pool.size - r_i) / need if need > 0 else 1.0
+        scale = np.where(np.isin(ids, in_range), 1.0, inv_p)
+        rows_ids.append(ids.astype(np.int32))
+        rows_scale.append(scale.astype(np.float32))
+    batch_ids = np.stack(rows_ids)
+    col_scale = np.stack(rows_scale)
+    req_pos = np.searchsorted(batch_ids.reshape(-1),
+                              requested).astype(np.int32)
+    return ShardedBatchPlan(batch_ids=batch_ids, col_scale=col_scale,
+                            req_pos=req_pos, num_requested=int(uniq.size))
+
+
 def make_builder(spec: AssemblySpec, *, impl: str = "jax",
                  max_row_nnz: int = 0) -> MinibatchBuilder:
     """The serving instance of the shared batch-construction layer: one

@@ -1,0 +1,152 @@
+"""Threaded continuous-batching driver: concurrent submitters, one engine.
+
+The :class:`~repro.serve.engine.InferenceEngine` is deliberately
+single-threaded and event-driven — nothing happens outside ``submit`` /
+``pump`` / ``drain``. Under concurrent load that leaves two gaps: (1) nobody
+calls ``pump`` while every client thread is blocked waiting for its own
+result, so deadline flushes never fire; (2) with ``mesh_dp`` stacking, a
+partially filled device group can sit staged while a full group's worth of
+traffic would arrive a moment later. The driver closes both:
+
+* all engine access is serialized under one lock — any number of threads may
+  ``submit`` concurrently and get a ``concurrent.futures.Future`` back;
+* a background pump thread drives deadline flushes so the mesh stays fed
+  even when no submitter is active;
+* **starvation-aware flush**: if the *oldest incomplete request* has waited
+  longer than ``starvation_ms``, the driver force-drains the engine —
+  bounding worst-case latency below the per-item batcher deadline whenever
+  that deadline is long (it exists to fill batches, not to park requests).
+
+Results are routed back through futures, so submitter threads never poll:
+
+    with ServingDriver(engine) as drv:
+        fut = drv.submit([17, 42])          # from any thread
+        logits = fut.result(timeout=5)
+"""
+from __future__ import annotations
+
+import threading
+import time
+from concurrent.futures import Future
+from typing import Dict, Optional, Sequence, Tuple
+
+from repro.serve.engine import InferenceEngine
+
+
+class ServingDriver:
+    """Thread-safe front of one engine with its own pump loop.
+
+    ``auto=False`` skips the background thread — every flush then happens
+    via explicit ``pump()`` / ``drain()`` calls, which is what the
+    deterministic concurrency tests use to control interleaving exactly.
+    """
+
+    def __init__(self, engine: InferenceEngine, *,
+                 starvation_ms: float = 25.0, poll_ms: float = 1.0,
+                 auto: bool = True):
+        assert not engine.opts.replay, (
+            "the driver uses real time; replay engines are driven directly")
+        self._eng = engine
+        self._starvation = starvation_ms / 1e3
+        self._poll = poll_ms / 1e3
+        self._lock = threading.Lock()
+        self._futures: Dict[int, Tuple[Future, float]] = {}
+        self._stop = threading.Event()
+        self._wake = threading.Event()
+        self.starvation_flushes = 0
+        self.last_error: Optional[BaseException] = None
+        self._thread: Optional[threading.Thread] = None
+        if auto:
+            self._thread = threading.Thread(target=self._loop, daemon=True,
+                                            name="serve-driver-pump")
+            self._thread.start()
+
+    # -- client API (any thread) --------------------------------------------
+
+    def submit(self, vertices: Sequence[int]) -> Future:
+        """Enqueue one classification request; the Future resolves to its
+        (k, num_classes) logits."""
+        fut: Future = Future()
+        with self._lock:
+            if self._stop.is_set():
+                raise RuntimeError("submit() after close(): nothing would "
+                                   "ever flush this request")
+            rid = self._eng.submit(vertices)
+            self._futures[rid] = (fut, time.monotonic())
+            self._collect_locked()          # submit may complete inline
+        self._wake.set()
+        return fut
+
+    def pump(self) -> None:
+        """One manual service turn (deadline + starvation check)."""
+        with self._lock:
+            self._service_locked(time.monotonic())
+
+    def drain(self) -> None:
+        """Flush everything queued and resolve every completed future."""
+        with self._lock:
+            self._eng.drain()
+            self._collect_locked()
+
+    def close(self) -> None:
+        """Drain outstanding work and stop the pump thread."""
+        self._stop.set()
+        self._wake.set()
+        if self._thread is not None:
+            self._thread.join(timeout=5)
+            self._thread = None
+        self.drain()
+
+    def __enter__(self) -> "ServingDriver":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+    def stats(self) -> dict:
+        with self._lock:
+            out = self._eng.stats()
+            out["inflight"] = len(self._futures)
+            out["starvation_flushes"] = self.starvation_flushes
+        return out
+
+    # -- internals ----------------------------------------------------------
+
+    def _collect_locked(self) -> None:
+        for rid, logits in self._eng.take_completed().items():
+            entry = self._futures.pop(rid, None)
+            if entry is not None:
+                entry[0].set_result(logits)
+
+    def _service_locked(self, now: float) -> None:
+        self._eng.pump()
+        self._collect_locked()       # deadline completions are not starving
+        if self._futures:
+            oldest = min(t for _, t in self._futures.values())
+            if now - oldest >= self._starvation:
+                # bound tail latency: don't let a sparse period park requests
+                # behind the batch-fill deadline
+                self._eng.drain()
+                self.starvation_flushes += 1
+                self._collect_locked()
+
+    def _fail_all_locked(self, exc: BaseException) -> None:
+        futures, self._futures = self._futures, {}
+        for fut, _ in futures.values():
+            if not fut.done():
+                fut.set_exception(exc)
+
+    def _loop(self) -> None:
+        while not self._stop.is_set():
+            self._wake.wait(self._poll)
+            self._wake.clear()
+            try:
+                with self._lock:
+                    self._service_locked(time.monotonic())
+            except Exception as exc:
+                # a silently dead pump thread would hang every in-flight
+                # future; surface the error through them and keep servicing
+                # later traffic
+                self.last_error = exc
+                with self._lock:
+                    self._fail_all_locked(exc)

@@ -52,6 +52,22 @@ class ServeOptions:
     # extraction backend for neighborhood assembly: "jax" (reference) or
     # "pallas" (fused gather kernel, kernels/extract_gather.py)
     extract_impl: str = "jax"
+    # -- multi-host serving over the 3D PMM mesh (serve/distributed.py) -----
+    # (1, 1, 1) is the single-device path (the correctness oracle); a cube
+    # (g, g, g) fans every micro-batch out across the PMM grid.
+    mesh_shape: tuple = (1, 1, 1)
+    # data-parallel serving groups: the mesh gains a 'd' axis of this size
+    # and ONE device call serves `mesh_dp` stacked micro-batches.
+    mesh_dp: int = 1
+    # stratify the support plan into this many vertex ranges WITHOUT a mesh
+    # (0 = derive from mesh_shape). This is the oracle knob: a single-device
+    # engine with plan_ranges=g builds bit-identical micro-batches to a
+    # (g, g, g) mesh engine, isolating the parallel forward as the only
+    # difference.
+    plan_ranges: int = 0
+    # run the shard_map'd path even on a (1, 1, 1) mesh (CI coverage on one
+    # CPU device; the math is identical either way).
+    force_distributed: bool = False
 
 
 class _Pending:
@@ -73,7 +89,6 @@ class InferenceEngine:
         self.opts = options
         self.spec = asm.make_spec(A, options.slots, options.support, e_cap)
         self._params = params
-        self._pool = asm.make_support_pool(self.spec.n, options.support_seed)
         self._batcher = MicroBatcher(options.slots,
                                      options.max_delay_ms / 1e3)
         self._cache = (EmbeddingCache(options.cache_capacity,
@@ -84,21 +99,59 @@ class InferenceEngine:
         self._next_id = 0
         self._vnow = 0.0                       # virtual clock (replay mode)
 
-        rp = jnp.asarray(A.indptr)
-        ci = jnp.asarray(A.indices)
-        val = jnp.asarray(A.data)
-        feats = jnp.asarray(features, jnp.float32)
-        e_cap_static = self.spec.e_cap
-        builder = asm.make_builder(self.spec, impl=options.extract_impl,
-                                   max_row_nnz=A.max_row_nnz())
+        g3 = tuple(options.mesh_shape)
+        assert len(g3) == 3 and g3[0] == g3[1] == g3[2] >= 1, (
+            "mesh_shape must be a cube (g, g, g)")
+        g_mesh = g3[0]
+        self._dp = options.mesh_dp
+        self._distributed = (g_mesh > 1 or self._dp > 1
+                             or options.force_distributed)
+        assert options.micro_batch or self._dp == 1, (
+            "naive mode (micro_batch=False) promises one device call per "
+            "request; dp staging (mesh_dp > 1) would silently batch them")
+        self._staged: List = []                # (MicroBatch, t) awaiting dp
 
-        def fwd(params, batch_ids, col_scale):
-            adj = builder.assemble(rp, ci, val, batch_ids, col_scale,
-                                   e_cap=e_cap_static)
-            return M.forward(params, adj, feats[batch_ids], cfg,
-                             train=False)
+        if self._distributed:
+            from repro.serve.distributed import (build_serve_plan,
+                                                 make_serve_mesh)
+            assert options.plan_ranges in (0, g_mesh), (
+                "plan_ranges is fixed to the mesh grid side when serving "
+                "over a mesh")
+            mesh = make_serve_mesh(g_mesh, self._dp)
+            self._dist = build_serve_plan(
+                A, np.asarray(features, np.float32), cfg, mesh, self.spec,
+                extract_impl=options.extract_impl,
+                support_seed=options.support_seed)
+            self._n_pad_plan = self._dist.pg.n_pad
+            self._pools = self._dist.pools
+            self._graph_sh = self._dist.shard_graph()
+            self._params_sh = self._dist.shard_params(params)
+            self._fwd = None
+        else:
+            assert self._dp == 1, "mesh_dp > 1 needs a mesh"
+            self._dist = None
+            g_plan = options.plan_ranges or 1
+            n_local = -(-self.spec.n // g_plan)
+            self._n_pad_plan = n_local * g_plan
+            self._pools = asm.make_support_pools(
+                self.spec.n, self._n_pad_plan, g_plan,
+                options.support_seed, min_size=self.spec.total // g_plan)
 
-        self._fwd = jax.jit(fwd)
+            rp = jnp.asarray(A.indptr)
+            ci = jnp.asarray(A.indices)
+            val = jnp.asarray(A.data)
+            feats = jnp.asarray(features, jnp.float32)
+            e_cap_static = self.spec.e_cap
+            builder = asm.make_builder(self.spec, impl=options.extract_impl,
+                                       max_row_nnz=A.max_row_nnz())
+
+            def fwd(params, batch_ids, col_scale):
+                adj = builder.assemble(rp, ci, val, batch_ids, col_scale,
+                                       e_cap=e_cap_static)
+                return M.forward(params, adj, feats[batch_ids], cfg,
+                                 train=False)
+
+            self._fwd = jax.jit(fwd)
 
         # counters
         self.completed = 0
@@ -176,12 +229,18 @@ class InferenceEngine:
         now = self._now(now)
         for b in self._batcher.flush_due(now):
             self._run_batch(b, now)
+        # a partially filled dp group must not wait forever for more batches
+        if (self._staged
+                and now >= self._staged[0][1] + self.opts.max_delay_ms / 1e3):
+            self._flush_staged(now)
 
     def drain(self, now: Optional[float] = None) -> None:
         """Flush every queued item regardless of deadlines."""
         now = self._now(now)
         for b in self._batcher.flush_all():
             self._run_batch(b, now)
+        if self._staged:
+            self._flush_staged(now)
 
     def poll(self, rid: int,
              now: Optional[float] = None) -> Optional[np.ndarray]:
@@ -197,6 +256,12 @@ class InferenceEngine:
         out = self._done.pop(rid)
         return out
 
+    def take_completed(self) -> Dict[int, np.ndarray]:
+        """Pop every finished request at once: {rid: (k, C) logits}. The
+        threaded driver's bulk alternative to per-rid ``poll``."""
+        done, self._done = self._done, {}
+        return done
+
     def invalidate(self) -> None:
         """Graph/model changed: next lookups miss (cache version bump)."""
         if self._cache is not None:
@@ -205,50 +270,103 @@ class InferenceEngine:
     def update_params(self, params) -> None:
         """Swap model weights (same pytree structure; no recompile)."""
         self._params = params
+        if self._distributed:
+            self._params_sh = self._dist.shard_params(params)
         self.invalidate()
 
     # -- internals -----------------------------------------------------------
 
     def _run_batch(self, batch: MicroBatch, now: float) -> None:
-        dim = self.cfg.num_classes
-        verts = np.asarray(batch.vertices, np.int64)
-        distinct = np.unique(verts)
+        """Execute one micro-batch — immediately with one DP group, staged
+        until ``mesh_dp`` batches are ready (continuous batching over the
+        mesh's data axis) otherwise."""
+        if self._dp == 1:
+            self._execute_group([batch], now)
+            return
+        # deadline bookkeeping uses the batch's OLDEST item enqueue time, so
+        # batcher wait + staging wait share ONE max_delay budget (not 2x)
+        self._staged.append((batch, batch.items[0].t_enqueue))
+        if len(self._staged) >= self._dp:
+            self._flush_staged(now)
+
+    def _flush_staged(self, now: float) -> None:
+        group, self._staged = [b for b, _ in self._staged], []
+        self._execute_group(group, now)
+
+    def _miss_rows(self, batch: MicroBatch):
+        """(cache-served rows, still-missing distinct vertices) of a batch.
+
+        The re-check deliberately skips hit/miss counters: these vertices
+        already missed at submit time, but an earlier batch may have filled
+        them while they sat in the queue."""
+        distinct = np.unique(np.asarray(batch.vertices, np.int64))
         rows: Dict[int, np.ndarray] = {}
-
-        if self._cache is not None:
-            # re-check without touching hit/miss counters: these vertices
-            # already missed at submit time, but an earlier batch may have
-            # filled them while they sat in the queue
-            miss_list = []
-            for v in distinct:
-                row = self._cache.peek(v)
-                if row is not None:
-                    rows[int(v)] = row
-                else:
-                    miss_list.append(v)
-            miss = np.asarray(miss_list, np.int64)
-        else:
-            miss = distinct
-
-        if miss.size:
-            plan = asm.plan_batch(miss, self.spec, self._pool)
-            logits = self._fwd(self._params, jnp.asarray(plan.batch_ids),
-                               jnp.asarray(plan.col_scale))
-            logits = np.asarray(jax.block_until_ready(logits))
-            self.device_calls += 1
-            fresh = logits[plan.req_pos]          # (|miss|, C), in miss order
-            for v, row in zip(miss, fresh):
+        if self._cache is None:
+            return rows, distinct
+        miss_list = []
+        for v in distinct:
+            row = self._cache.peek(v)
+            if row is not None:
                 rows[int(v)] = row
-            if self._cache is not None:
-                self._cache.put_many(miss, fresh)
+            else:
+                miss_list.append(v)
+        return rows, np.asarray(miss_list, np.int64)
+
+    def _forward_plans(self, plans: List[asm.ShardedBatchPlan]) -> np.ndarray:
+        """ONE device call for up to ``mesh_dp`` planned micro-batches;
+        returns (len(plans), total, num_classes) logits in flat batch
+        order."""
+        n_cls = self.cfg.num_classes
+        if not self._distributed:
+            (plan,) = plans                     # dp staging implies a mesh
+            logits = self._fwd(self._params,
+                               jnp.asarray(plan.batch_ids.reshape(-1)),
+                               jnp.asarray(plan.col_scale.reshape(-1)))
+            return np.asarray(jax.block_until_ready(logits))[None]
+        # pad the group to the static dp extent by repeating the first plan
+        # (the duplicate groups' outputs are simply never read)
+        pad = [plans[0]] * (self._dp - len(plans))
+        ids3d = np.stack([p.batch_ids for p in plans + pad])
+        scale3d = np.stack([p.col_scale for p in plans + pad])
+        logits = self._dist.step(self._params_sh, self._graph_sh,
+                                 jnp.asarray(ids3d), jnp.asarray(scale3d))
+        logits = np.asarray(jax.block_until_ready(logits))
+        return logits[:len(plans), :, :n_cls]   # drop padded classes/groups
+
+    def _execute_group(self, group: List[MicroBatch], now: float) -> None:
+        staged = []                             # (batch, rows, miss, plan)
+        plans = []
+        for batch in group:
+            rows, miss = self._miss_rows(batch)
+            plan = None
+            if miss.size:
+                plan = asm.plan_batch_ranges(miss, self.spec, self._pools,
+                                             self._n_pad_plan)
+                plans.append(plan)
+            staged.append((batch, rows, miss, plan))
+
+        if plans:
+            logits = self._forward_plans(plans)
+            self.device_calls += 1
+            k = 0
+            for batch, rows, miss, plan in staged:
+                if plan is None:
+                    continue
+                fresh = logits[k][plan.req_pos]   # (|miss|, C), miss order
+                k += 1
+                for v, row in zip(miss, fresh):
+                    rows[int(v)] = row
+                if self._cache is not None:
+                    self._cache.put_many(miss, fresh)
 
         t_done = now if self.opts.replay else time.monotonic()
-        for it in batch.items:
-            req = self._requests[it.req_id]
-            req.out[it.pos] = rows[it.vertex]
-            req.remaining -= 1
-            if req.remaining == 0:
-                self._finish(it.req_id, t_done)
+        for batch, rows, _, _ in staged:
+            for it in batch.items:
+                req = self._requests[it.req_id]
+                req.out[it.pos] = rows[it.vertex]
+                req.remaining -= 1
+                if req.remaining == 0:
+                    self._finish(it.req_id, t_done)
 
     def _finish(self, rid: int, t_done: float) -> None:
         req = self._requests.pop(rid)
@@ -278,6 +396,7 @@ class InferenceEngine:
             "device_calls": self.device_calls,
             "batches": self._batcher.batches_emitted,
             "pending": self._batcher.pending,
+            "staged": len(self._staged),
             "p50_ms": float(np.percentile(lat, 50) * 1e3) if lat.size else 0.0,
             "p99_ms": float(np.percentile(lat, 99) * 1e3) if lat.size else 0.0,
             "req_per_s": self.completed / span if span > 0 else float("inf"),

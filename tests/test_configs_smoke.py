@@ -3,7 +3,6 @@ REDUCED variant of each family and run one forward + one train step on CPU,
 asserting output shapes and absence of NaNs. Full configs are validated
 structurally (parameter counts vs published sizes, sharding divisibility)
 — they are exercised via the dry-run, never allocated here."""
-import dataclasses
 
 import jax
 import jax.numpy as jnp

@@ -8,7 +8,7 @@ import textwrap
 import jax
 import pytest
 
-from repro.configs import ARCH_IDS, INPUT_SHAPES, get_config
+from repro.configs import INPUT_SHAPES, get_config
 
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 

@@ -212,6 +212,35 @@ print("PASS")
 
 
 @pytest.mark.slow
+def test_prefetch_pipeline_equivalence_block_ell():
+    """§V-A prefetch with block-ELL minibatches on the real 16-device mesh:
+    the per-leaf (tiles, colidx) specs must round-trip between the sampling
+    shard_map's out_specs and the loss shard_map's in_specs."""
+    _run(COMMON + """
+from repro.core import pipeline as PL
+from repro.optim import AdamW
+import numpy as np
+plan_e = fourd.build_plan(pg, cfg, mesh, batch=128,
+    opts=fourd.TrainOptions(spmm_impl="ell", ell_tile=16, ell_slots=16))
+params_e = plan_e.shard_params(M.init_params(jax.random.PRNGKey(1), cfg))
+opt = AdamW(lr=5e-3)
+opt_state = opt.init(params_e)
+ts = fourd.make_train_step(plan_e, opt)
+p0, o0, ref = params_e, opt_state, []
+for s in range(3):
+    p0, o0, l = ts(p0, o0, graph, jnp.asarray(s)); ref.append(float(l))
+sample_fn, step_fn = PL.make_prefetched_train_step(plan_e, opt)
+state = PL.PrefetchState(params_e, opt_state,
+                         sample_fn(graph, jnp.asarray(0)))
+got = []
+for s in range(3):
+    state, l = step_fn(state, graph, jnp.asarray(s)); got.append(float(l))
+assert np.allclose(ref, got, rtol=1e-5), (ref, got)
+print("PASS")
+""")
+
+
+@pytest.mark.slow
 def test_block_ell_spmm_path_matches_dense():
     """§Perf H3.4: the block-ELL extraction + Pallas SpMM path produces
     the same distributed loss and gradients as the dense-block path."""

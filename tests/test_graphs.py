@@ -1,9 +1,9 @@
 import numpy as np
 import pytest
 
-from repro.graphs import (CSRMatrix, add_self_loops, build_partitioned_graph,
-                          coo_to_csr, csr_to_dense, csr_transpose,
-                          get_dataset, make_synthetic_dataset, sym_normalize)
+from repro.graphs import (add_self_loops, build_partitioned_graph, coo_to_csr,
+                          csr_to_dense, csr_transpose, get_dataset,
+                          make_synthetic_dataset, sym_normalize)
 from repro.graphs.csr import make_undirected
 
 

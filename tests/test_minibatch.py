@@ -227,26 +227,47 @@ def test_prefetch_pipeline_matches_unpipelined_losses(g1_setup):
     ts = fourd.make_train_step(plan, opt)
     p0, o0, ref = params, opt_state, []
     for s in range(4):
-        p0, o0, l = ts(p0, o0, graph, jnp.asarray(s))
-        ref.append(float(l))
+        p0, o0, loss = ts(p0, o0, graph, jnp.asarray(s))
+        ref.append(float(loss))
     sample_fn, step_fn = PL.make_prefetched_train_step(plan, opt)
     state = PL.PrefetchState(params, opt_state,
                              sample_fn(graph, jnp.asarray(0)))
     assert isinstance(state.minibatch, Minibatch)
     got = []
     for s in range(4):
-        state, l = step_fn(state, graph, jnp.asarray(s))
-        got.append(float(l))
+        state, loss = step_fn(state, graph, jnp.asarray(s))
+        got.append(float(loss))
     np.testing.assert_allclose(ref, got, rtol=1e-5)
 
 
-def test_prefetch_rejects_ell_format(g1_setup):
+@pytest.mark.parametrize("extract", ["jax", "pallas"])
+def test_prefetch_pipeline_matches_unpipelined_losses_ell(g1_setup, extract):
+    """The §V-A pipeline carries block-ELL minibatches too (per-leaf tile
+    specs in ``pipeline._minibatch_specs``): the pipelined loss sequence
+    must equal the unpipelined one exactly, for both extraction backends."""
     ds, pg, cfg, mesh = g1_setup
     plan = fourd.build_plan(pg, cfg, mesh, batch=64,
                             opts=fourd.TrainOptions(spmm_impl="ell",
-                                                    ell_tile=16))
-    with pytest.raises(NotImplementedError):
-        PL.make_prefetched_train_step(plan, AdamW(lr=1e-3))
+                                                    ell_tile=16,
+                                                    ell_slots=16,
+                                                    extract_impl=extract))
+    params = plan.shard_params(M.init_params(jax.random.PRNGKey(1), cfg))
+    graph = plan.shard_graph(pg)
+    opt = AdamW(lr=5e-3)
+    opt_state = opt.init(params)
+    ts = fourd.make_train_step(plan, opt)
+    p0, o0, ref = params, opt_state, []
+    for s in range(4):
+        p0, o0, loss = ts(p0, o0, graph, jnp.asarray(s))
+        ref.append(float(loss))
+    sample_fn, step_fn = PL.make_prefetched_train_step(plan, opt)
+    state = PL.PrefetchState(params, opt_state,
+                             sample_fn(graph, jnp.asarray(0)))
+    got = []
+    for s in range(4):
+        state, loss = step_fn(state, graph, jnp.asarray(s))
+        got.append(float(loss))
+    np.testing.assert_allclose(ref, got, rtol=1e-5)
 
 
 def test_builder_requires_row_bound_for_pallas():

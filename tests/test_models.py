@@ -1,5 +1,4 @@
 """Model-stack unit tests: attention, SSD, MoE, per-family consistency."""
-import dataclasses
 
 import jax
 import jax.numpy as jnp

@@ -1,7 +1,6 @@
 """Tests for the loop-aware HLO cost analyzer."""
 import jax
 import jax.numpy as jnp
-import numpy as np
 import pytest
 
 from repro.launch.roofline import (analyze_hlo, model_flops, roofline_terms,

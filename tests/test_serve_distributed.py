@@ -1,0 +1,256 @@
+"""Tests for multi-host serving over the 3D PMM mesh (serve/distributed.py).
+
+Tier-1 (single CPU device): the stratified planner's invariants and its
+bit-equality with the single-device planner at g = 1, plus the shard_map'd
+serving step forced onto a (1, 1, 1) mesh — the full distributed code path,
+no extra devices needed.
+
+The real-mesh acceptance test — (2, 2, 2) x dp on 16 forced host devices,
+predictions bit-matching the single-device engine — runs in a subprocess
+exactly like tests/test_fourd_multidevice.py and is skip-guarded the same
+way (force with REPRO_RUN_MULTIDEVICE=1; CI's `multidevice` job does).
+"""
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import gcn_model as M
+from repro.graphs import csr_to_dense, make_synthetic_dataset
+from repro.serve import (InferenceEngine, ServeOptions, make_spec,
+                         make_support_pool, make_support_pools, plan_batch,
+                         plan_batch_ranges)
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+FORCE = os.environ.get("REPRO_RUN_MULTIDEVICE", "0") == "1"
+
+
+@pytest.fixture(scope="module")
+def served():
+    ds = make_synthetic_dataset(n=128, num_classes=4, d_in=8,
+                                avg_degree=6, seed=1)
+    cfg = M.GCNConfig(d_in=8, d_hidden=16, num_layers=2, num_classes=4,
+                      dropout=0.0)
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+    return ds, cfg, params
+
+
+# ---------------------------------------------------------------------------
+# Stratified planner
+# ---------------------------------------------------------------------------
+
+def test_pools_and_plan_match_single_device_at_g1(served):
+    """g = 1 is the degenerate case: pools and plans must be bit-identical
+    to the PR-1 single-device planner, so the engine's unification of the
+    two paths cannot shift any previously served result."""
+    ds, _, _ = served
+    A = ds.adj_norm
+    n = A.n_rows
+    (pool,) = make_support_pools(n, n, 1, seed=7)
+    np.testing.assert_array_equal(pool, make_support_pool(n, seed=7))
+    spec = make_spec(A, slots=8, support=24)
+    req = np.array([5, 77, 11, 5])
+    ref = plan_batch(req, spec, make_support_pool(n, seed=7))
+    got = plan_batch_ranges(req, spec, [pool], n_pad=n)
+    np.testing.assert_array_equal(got.batch_ids.reshape(-1), ref.batch_ids)
+    np.testing.assert_array_equal(got.col_scale.reshape(-1), ref.col_scale)
+    np.testing.assert_array_equal(got.req_pos, ref.req_pos)
+    assert got.num_requested == ref.num_requested
+
+
+def test_plan_ranges_stratified_invariants(served):
+    """g = 4 plan: exactly total/g distinct ids per range, all inside the
+    range, requested columns at scale 1, support at the per-range unbiased
+    (n_i - r_i)/need_i, and a globally sorted flat order."""
+    ds, _, _ = served
+    A = ds.adj_norm
+    n = A.n_rows                                    # 128
+    g = 4
+    spec = make_spec(A, slots=8, support=56)        # total 64, b_loc 16
+    pools = make_support_pools(n, n, g, seed=0)
+    req = np.array([0, 1, 2, 3, 4, 5, 6, 127])     # pile-up in range 0
+    plan = plan_batch_ranges(req, spec, pools, n_pad=n)
+    b_loc, n_loc = 64 // g, n // g
+    assert plan.batch_ids.shape == (g, b_loc)
+    flat = plan.batch_ids.reshape(-1)
+    assert np.array_equal(np.sort(flat), np.unique(flat))  # sorted+distinct
+    np.testing.assert_array_equal(flat[plan.req_pos], req)
+    for i in range(g):
+        ids = plan.batch_ids[i]
+        assert ids.min() >= i * n_loc and ids.max() < (i + 1) * n_loc
+        in_range = req[(req >= i * n_loc) & (req < (i + 1) * n_loc)]
+        r_i = np.unique(in_range).size
+        need = b_loc - r_i
+        is_req = np.isin(ids, req)
+        assert is_req.sum() == r_i
+        np.testing.assert_allclose(plan.col_scale[i][is_req], 1.0)
+        np.testing.assert_allclose(plan.col_scale[i][~is_req],
+                                   (n_loc - r_i) / need)
+
+
+def test_short_range_rejected_at_construction():
+    """A vertex range with fewer true vertices than total/g could never fill
+    its slots — rejected when the pools are built, not on the first request
+    that happens to hit the short range."""
+    make_support_pools(101, 104, 4, min_size=23)          # 23 <= shortest
+    with pytest.raises(AssertionError, match="true vertices"):
+        make_support_pools(101, 104, 4, min_size=25)      # range 3 has 23
+
+
+def test_plan_ranges_rejects_range_overflow(served):
+    ds, _, _ = served
+    A = ds.adj_norm
+    spec = make_spec(A, slots=40, support=24)       # total 64, b_loc 16 < 40
+    pools = make_support_pools(A.n_rows, A.n_rows, 4, seed=0)
+    with pytest.raises(AssertionError, match="overflow one range"):
+        plan_batch_ranges(np.arange(5), spec, pools, n_pad=A.n_rows)
+
+
+# ---------------------------------------------------------------------------
+# The shard_map'd step on a (1, 1, 1) mesh (single CPU device)
+# ---------------------------------------------------------------------------
+
+def test_forced_distributed_matches_single_engine(served):
+    """force_distributed exercises the full shard_map'd serving step on one
+    device; it must reproduce the legacy path's logits (same planner, same
+    math — only the parallel decomposition differs)."""
+    ds, cfg, params = served
+    opts = dict(slots=8, support=56, max_delay_ms=1.0)
+    single = InferenceEngine(params, cfg, ds.adj_norm, ds.features,
+                             ServeOptions(**opts))
+    dist = InferenceEngine(params, cfg, ds.adj_norm, ds.features,
+                           ServeOptions(force_distributed=True, **opts))
+    rng = np.random.default_rng(0)
+    for _ in range(3):
+        req = rng.integers(0, 128, size=5).tolist()
+        a, b = single.predict(req), dist.predict(req)
+        np.testing.assert_allclose(b, a, rtol=2e-4, atol=1e-5)
+        assert np.array_equal(a.argmax(-1), b.argmax(-1))
+
+
+def test_forced_distributed_full_coverage_exact(served):
+    """With support covering all of V the serving estimator is exact: the
+    distributed engine must match the dense reference forward rows."""
+    ds, cfg, params = served
+    eng = InferenceEngine(params, cfg, ds.adj_norm, ds.features,
+                          ServeOptions(slots=8, support=120,
+                                       force_distributed=True))
+    out = eng.predict([5, 77, 11])
+    dense = jnp.asarray(csr_to_dense(ds.adj_norm))
+    ref = np.asarray(M.forward(params, dense, jnp.asarray(ds.features),
+                               cfg, train=False))
+    np.testing.assert_allclose(out, ref[[5, 77, 11]], atol=1e-5)
+
+
+def test_distributed_update_params_reshards(served):
+    ds, cfg, params = served
+    eng = InferenceEngine(params, cfg, ds.adj_norm, ds.features,
+                          ServeOptions(slots=8, support=56,
+                                       force_distributed=True))
+    base = eng.predict([3, 9])
+    params2 = jax.tree.map(lambda a: a * 0.5, params)
+    eng.update_params(params2)
+    bumped = eng.predict([3, 9])
+    assert not np.allclose(base, bumped)
+    ref = InferenceEngine(params2, cfg, ds.adj_norm, ds.features,
+                          ServeOptions(slots=8, support=56)).predict([3, 9])
+    np.testing.assert_allclose(bumped, ref, rtol=2e-4, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# The real mesh: (2, 2, 2) x dp on 16 forced host devices (subprocess)
+# ---------------------------------------------------------------------------
+
+def _run(body: str, n_dev: int = 16, timeout: int = 600) -> str:
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={n_dev}"
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    r = subprocess.run([sys.executable, "-c", textwrap.dedent(body)],
+                       env=env, capture_output=True, text=True,
+                       timeout=timeout)
+    assert r.returncode == 0, f"STDOUT:\n{r.stdout}\nSTDERR:\n{r.stderr}"
+    assert "PASS" in r.stdout, r.stdout
+    return r.stdout
+
+
+needs_mesh = pytest.mark.skipif(
+    not FORCE and jax.device_count() < 16,
+    reason="needs 16 devices; subprocess emulation on a single CPU host is "
+           "outside the tier-1 budget — set REPRO_RUN_MULTIDEVICE=1")
+
+
+@needs_mesh
+@pytest.mark.slow
+def test_mesh_serving_bitmatches_single_device_engine():
+    """Acceptance: on a (2, 2, 2) PMM mesh the engine serves the same
+    request stream as the single-device oracle (identical micro-batch plans
+    via plan_ranges=2) with bit-matching argmax predictions and logits equal
+    to collective-reduction rounding."""
+    _run("""
+import numpy as np, jax
+from repro.core import gcn_model as M
+from repro.graphs import make_synthetic_dataset
+from repro.serve import InferenceEngine, ServeOptions
+ds = make_synthetic_dataset(n=256, num_classes=4, d_in=16, avg_degree=8,
+                            seed=0)
+cfg = M.GCNConfig(d_in=16, d_hidden=32, num_layers=3, num_classes=4,
+                  dropout=0.0)
+params = M.init_params(jax.random.PRNGKey(0), cfg)
+common = dict(slots=8, support=56, max_delay_ms=1.0)
+oracle = InferenceEngine(params, cfg, ds.adj_norm, ds.features,
+                         ServeOptions(plan_ranges=2, **common))
+mesh = InferenceEngine(params, cfg, ds.adj_norm, ds.features,
+                       ServeOptions(mesh_shape=(2, 2, 2), **common))
+rng = np.random.default_rng(3)
+for t in range(6):
+    req = rng.integers(0, 256, size=rng.integers(1, 8)).tolist()
+    a, b = oracle.predict(req), mesh.predict(req)
+    assert np.array_equal(a.argmax(-1), b.argmax(-1)), (t, a, b)
+    np.testing.assert_allclose(b, a, rtol=2e-4, atol=1e-5)
+print("PASS")
+""")
+
+
+@needs_mesh
+@pytest.mark.slow
+def test_mesh_serving_dp_stacks_microbatches():
+    """(2, 2, 2) x dp=2 = 16 devices: one device call serves two stacked
+    micro-batches (5 batches -> 3 calls) and every request still matches
+    the single-device oracle."""
+    _run("""
+import numpy as np, jax
+from repro.core import gcn_model as M
+from repro.graphs import make_synthetic_dataset
+from repro.serve import InferenceEngine, ServeOptions
+ds = make_synthetic_dataset(n=256, num_classes=4, d_in=16, avg_degree=8,
+                            seed=0)
+cfg = M.GCNConfig(d_in=16, d_hidden=32, num_layers=3, num_classes=4,
+                  dropout=0.0)
+params = M.init_params(jax.random.PRNGKey(0), cfg)
+common = dict(slots=8, support=56, max_delay_ms=1.0)
+oracle = InferenceEngine(params, cfg, ds.adj_norm, ds.features,
+                         ServeOptions(plan_ranges=2, **common))
+mesh = InferenceEngine(params, cfg, ds.adj_norm, ds.features,
+                       ServeOptions(mesh_shape=(2, 2, 2), mesh_dp=2,
+                                    **common))
+rng = np.random.default_rng(5)
+rids, refs = [], []
+for t in range(5):
+    req = rng.integers(0, 256, size=8).tolist()
+    rids.append(mesh.submit(req))
+    refs.append(oracle.predict(req))
+mesh.drain()
+st = mesh.stats()
+assert st["device_calls"] == 3, st
+for rid, ref in zip(rids, refs):
+    out = mesh.poll(rid)
+    assert out is not None
+    assert np.array_equal(out.argmax(-1), ref.argmax(-1))
+    np.testing.assert_allclose(out, ref, rtol=2e-4, atol=1e-5)
+print("PASS")
+""")

@@ -1,0 +1,173 @@
+"""Engine-concurrency tests: the threaded continuous-batching driver.
+
+Expected outputs are made composition-independent by giving every engine a
+full-coverage support set (support = n - slots ⇒ every micro-batch covers
+all of V at scale 1, so a request's logits equal the dense reference rows no
+matter which batch it lands in). That turns thread-schedule nondeterminism
+into a non-issue: re-running any scenario must reproduce identical
+per-request outputs — the deterministic-replay property under load.
+"""
+import threading
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import gcn_model as M
+from repro.graphs import csr_to_dense, make_synthetic_dataset
+from repro.serve import InferenceEngine, ServeOptions, ServingDriver
+
+N = 96
+
+
+@pytest.fixture(scope="module")
+def served():
+    ds = make_synthetic_dataset(n=N, num_classes=4, d_in=8,
+                                avg_degree=6, seed=2)
+    cfg = M.GCNConfig(d_in=8, d_hidden=16, num_layers=2, num_classes=4,
+                      dropout=0.0)
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+    dense = jnp.asarray(csr_to_dense(ds.adj_norm))
+    ref = np.asarray(M.forward(params, dense, jnp.asarray(ds.features),
+                               cfg, train=False))
+    return ds, cfg, params, ref
+
+
+def _engine(served, **kw):
+    ds, cfg, params, _ = served
+    opts = dict(slots=8, support=N - 8, max_delay_ms=2.0)
+    opts.update(kw)
+    eng = InferenceEngine(params, cfg, ds.adj_norm, ds.features,
+                          ServeOptions(**opts))
+    eng.predict([0])                       # one-time jit warmup
+    eng.reset_stats()
+    return eng
+
+
+def _run_threads(n, fn):
+    errs = []
+
+    def wrap(i):
+        try:
+            fn(i)
+        except Exception as e:            # surface failures in the main thread
+            errs.append(e)
+
+    ts = [threading.Thread(target=wrap, args=(i,)) for i in range(n)]
+    for t in ts:
+        t.start()
+    for t in ts:
+        t.join()
+    assert not errs, errs
+
+
+def test_submit_from_multiple_threads_routes_and_replays(served):
+    """8 submitter threads, two identical runs: every future resolves to its
+    OWN vertices' reference rows (no cross-request routing under races) and
+    the two runs produce identical outputs."""
+    _, _, _, ref = served
+
+    def scenario():
+        out = {}
+        eng = _engine(served)
+        with ServingDriver(eng, starvation_ms=20.0) as drv:
+            def worker(tid):
+                rng = np.random.default_rng(tid)
+                req = rng.integers(0, N, size=3).tolist()
+                out[tid] = (req, drv.submit(req).result(timeout=30))
+            _run_threads(8, worker)
+            drv.drain()
+        return out
+
+    a = scenario()
+    b = scenario()
+    assert set(a) == set(b) == set(range(8))
+    for tid, (req, logits) in a.items():
+        np.testing.assert_allclose(logits, ref[req], atol=1e-5)
+        np.testing.assert_array_equal(logits, b[tid][1])   # replay-identical
+
+
+def test_starvation_flush_beats_per_request_deadline(served):
+    """With a 10 s batcher deadline, a lone request must still complete
+    within the driver's starvation bound — the flush that serves it is the
+    starvation path, not the deadline path."""
+    eng = _engine(served, max_delay_ms=10_000.0)
+    t0 = time.monotonic()
+    with ServingDriver(eng, starvation_ms=30.0) as drv:
+        fut = drv.submit([3, 7])
+        out = fut.result(timeout=5)
+        waited = time.monotonic() - t0
+        assert drv.starvation_flushes >= 1
+    assert waited < 2.0, f"starved for {waited:.3f}s"
+    np.testing.assert_allclose(out, served[3][[3, 7]], atol=1e-5)
+
+
+def test_drain_completes_all_pending_under_load(served):
+    """Concurrent submitters racing a drain: after close(), every future is
+    done and correct, nothing is left pending anywhere."""
+    _, _, _, ref = served
+    eng = _engine(served, max_delay_ms=50.0)
+    futs = {}
+    with ServingDriver(eng, starvation_ms=500.0) as drv:
+        def worker(tid):
+            rng = np.random.default_rng(100 + tid)
+            for k in range(6):
+                req = rng.integers(0, N, size=2).tolist()
+                futs[(tid, k)] = (req, drv.submit(req))
+        _run_threads(6, worker)
+        drv.drain()
+        assert all(f.done() for _, f in futs.values())
+    assert len(futs) == 36
+    for req, fut in futs.values():
+        np.testing.assert_allclose(fut.result(timeout=0), ref[req],
+                                   atol=1e-5)
+    st = eng.stats()
+    assert st["pending"] == 0 and st["staged"] == 0
+    assert st["completed"] == 36                        # all requests served
+
+
+def test_pump_thread_failure_surfaces_through_futures(served):
+    """An engine error inside the background pump must not hang submitters:
+    every in-flight future fails with the exception, and the thread stays
+    alive for later traffic."""
+    eng = _engine(served, max_delay_ms=1.0)
+
+    def explode(now=None):
+        raise RuntimeError("injected pump failure")
+
+    eng.pump = explode
+    with ServingDriver(eng, starvation_ms=5.0) as drv:
+        fut = drv.submit([1, 2])
+        with pytest.raises(RuntimeError, match="injected pump failure"):
+            fut.result(timeout=5)
+        assert isinstance(drv.last_error, RuntimeError)
+        assert drv._thread.is_alive()
+
+
+def test_driver_rejects_replay_engines(served):
+    eng = _engine(served)
+    replay_eng = InferenceEngine(
+        served[2], served[1], served[0].adj_norm, served[0].features,
+        ServeOptions(slots=4, support=28, replay=True))
+    with pytest.raises(AssertionError):
+        ServingDriver(replay_eng)
+    eng.drain()
+
+
+def test_manual_driver_pump_services_deadlines(served):
+    """auto=False: nothing happens until pump() — then the deadline flush
+    runs and the future resolves (the deterministic single-step mode)."""
+    _, _, _, ref = served
+    eng = _engine(served, max_delay_ms=1.0)
+    drv = ServingDriver(eng, starvation_ms=10_000.0, auto=False)
+    fut = drv.submit([9, 4, 33])
+    assert not fut.done()
+    deadline = time.monotonic() + 5.0
+    while not fut.done() and time.monotonic() < deadline:
+        time.sleep(0.002)
+        drv.pump()
+    np.testing.assert_allclose(fut.result(timeout=0), ref[[9, 4, 33]],
+                               atol=1e-5)
+    drv.close()

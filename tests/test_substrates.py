@@ -1,5 +1,4 @@
 """Optimizer / checkpoint / data-pipeline substrate tests."""
-import os
 
 import jax
 import jax.numpy as jnp
