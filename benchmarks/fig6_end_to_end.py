@@ -1,6 +1,8 @@
 """Paper Fig. 6: end-to-end training time to a target test accuracy —
 ScaleGNN (4D, uniform sampling) vs the baseline algorithms (GraphSAINT-node
-DP, GraphSAGE neighbor sampling DP).
+DP, GraphSAGE neighbor sampling DP) — plus a scan-chunk ablation of the
+``repro.train`` runtime (per-step wall time at chunk sizes 1/8/32, putting
+the per-step Python-dispatch overhead win on the record).
 
 Per the paper's methodology (§VI-C) epoch times are NOT comparable across
 sampling algorithms; wall-clock to target accuracy is.
@@ -18,10 +20,13 @@ from repro.core import baselines as BL
 from repro.core import fourd, gcn_model as M, sampling as S
 from repro.graphs import build_partitioned_graph, make_synthetic_dataset
 from repro.optim import AdamW
+from repro.train import Trainer, TrainLoopConfig
 
 TARGET = 0.88
 MAX_STEPS = 400
 B = 256
+ABLATION_STEPS = 64                   # divisible by every chunk size below
+ABLATION_CHUNKS = (1, 8, 32)
 
 
 def main():
@@ -42,30 +47,44 @@ def main():
         return float(M.accuracy(logits, g["labels"], test))
 
     # --- ScaleGNN: 4D parallel (DP2 x 2^3 grid = 16... we have 8 devs ->
-    # DP1 x 2^3), uniform sampling, all optimizations on
+    # DP1 x 2^3), uniform sampling, all optimizations on, driven by the
+    # scan-chunked repro.train runtime (one eval per report boundary)
     pg = build_partitioned_graph(ds, g=2)
     cfg4 = M.GCNConfig(d_in=32, d_hidden=96, num_layers=3, num_classes=8,
                        dropout=0.2)
     mesh = fourd.make_mesh_4d(1, 2)
     opts = fourd.TrainOptions(dropout=0.2, bf16_collectives=True)
     plan = fourd.build_plan(pg, cfg4, mesh, batch=B, opts=opts)
-    params = plan.shard_params(M.init_params(jax.random.PRNGKey(0), cfg4))
+    # chunk buffers are donated, so every run needs fresh initial params
+    fresh4 = lambda: plan.shard_params(
+        M.init_params(jax.random.PRNGKey(0), cfg4))
     graph = plan.shard_graph(pg)
     opt = AdamW(lr=5e-3, weight_decay=1e-4)
-    opt_state = opt.init(params)
-    train_step = fourd.make_train_step(plan, opt)
-    eval_step = fourd.make_eval_step(plan)
-    train_step(params, opt_state, graph, jnp.asarray(0))  # compile
+    trainer = Trainer(plan, opt, TrainLoopConfig(
+        total_steps=MAX_STEPS, chunk_size=20, eval_every=20,
+        target_acc=TARGET))
+    trainer.compiled_chunk(20)(trainer.init_state(fresh4(), graph),
+                               graph)            # compile
     t0 = time.time()
-    t_hit, steps_hit = None, None
-    p, o = params, opt_state
-    for i in range(MAX_STEPS):
-        p, o, _ = train_step(p, o, graph, jnp.asarray(i))
-        if i % 20 == 19 and float(eval_step(p, graph)) >= TARGET:
-            t_hit, steps_hit = time.time() - t0, i + 1
-            break
+    state, log = trainer.run(trainer.init_state(fresh4(), graph), graph)
+    t_hit = (time.time() - t0) if log.hit_target else None
+    steps_hit = int(state.step) if log.hit_target else None
     csv("fig6_scalegnn_4d", (t_hit or (time.time() - t0)) * 1e6,
         f"steps={steps_hit} target={TARGET}")
+
+    # --- scan-chunk ablation: per-step wall time vs steps-per-dispatch.
+    # chunk=1 pays one host dispatch per optimizer step (the legacy loop);
+    # larger chunks amortize it inside one lax.scan.
+    for chunk in ABLATION_CHUNKS:
+        tr = Trainer(plan, opt, TrainLoopConfig(
+            total_steps=ABLATION_STEPS, chunk_size=chunk))
+        tr.run(tr.init_state(fresh4(), graph), graph)        # compile
+        timed_state = tr.init_state(fresh4(), graph)
+        t0 = time.perf_counter()
+        tr.run(timed_state, graph)
+        dt = time.perf_counter() - t0
+        csv(f"fig6_scan_chunk{chunk}", dt / ABLATION_STEPS * 1e6,
+            f"steps={ABLATION_STEPS} per-step")
 
     # --- baselines (single device, the algorithms of the baseline systems)
     for name in ("saint", "sage"):

@@ -1,69 +1,47 @@
 """Quickstart: ScaleGNN mini-batch training on one device in ~30 seconds.
 
-Demonstrates the paper's core loop (uniform vertex sampling -> induced
-subgraph with unbiased rescaling -> GCN step, Alg. 1) on a synthetic SBM
-stand-in for ogbn-products, built through the unified batch-construction
-layer (``repro.core.minibatch.MinibatchBuilder``).
+Demonstrates the paper's core loop (communication-free vertex sampling ->
+induced subgraph with unbiased rescaling -> GCN step) on a synthetic SBM
+stand-in for ogbn-products — through the SAME machinery the 16-device runs
+use, shrunk to a 1x1x1x1 mesh: the unified batch construction
+(``core.minibatch.MinibatchBuilder``), the one forward engine
+(``core.forward.ForwardEngine``), and the scan-chunked ``repro.train``
+runtime (8 optimizer steps per host dispatch, one eval per report).
+Swap ``--gd/--g`` on ``repro.launch.train`` and the identical program
+scales out.
 
     PYTHONPATH=src python examples/quickstart.py
 """
 import jax
-import jax.numpy as jnp
 
-from repro.core import gcn_model as M
-from repro.core import sampling as S
-from repro.core.minibatch import MinibatchBuilder
-from repro.graphs import csr_to_dense, get_dataset
+from repro.core import fourd, gcn_model as M
+from repro.graphs import build_partitioned_graph, get_dataset
 from repro.optim import AdamW
+from repro.train import Trainer, TrainLoopConfig
 
 
 def main():
     ds = get_dataset("ogbn-products", scale_vertices=2048, seed=0)
-    A = ds.adj_norm
-    rp, ci, val = (jnp.array(A.indptr), jnp.array(A.indices),
-                   jnp.array(A.data))
-    feats, labels = jnp.array(ds.features), jnp.array(ds.labels)
-    n, B = ds.num_vertices, 256
-    e_cap = B * A.max_row_nnz()
-
+    pg = build_partitioned_graph(ds, g=1)
     cfg = M.GCNConfig(d_in=ds.feature_dim, d_hidden=128, num_layers=3,
                       num_classes=ds.num_classes, dropout=0.2)
-    params = M.init_params(jax.random.PRNGKey(0), cfg)
+    mesh = fourd.make_mesh_4d(1, 1)                  # one device, same code
+    plan = fourd.build_plan(pg, cfg, mesh, batch=256,
+                            opts=fourd.TrainOptions(dropout=0.2))
+
+    graph = plan.shard_graph(pg)
     opt = AdamW(lr=5e-3, weight_decay=1e-4)
-    opt_state = opt.init(params)
+    trainer = Trainer(plan, opt, TrainLoopConfig(
+        total_steps=200, chunk_size=8, eval_every=48))
+    state = trainer.init_state(
+        plan.shard_params(M.init_params(jax.random.PRNGKey(0), cfg)), graph)
 
-    # Alg. 1 behind the one batch-construction layer: swap mode to
-    # "stratified", fmt to ELL, or impl to "pallas" without touching the
-    # training loop.
-    builder = MinibatchBuilder(
-        scfg=S.SampleConfig(n_pad=n, g=1, batch=B, e_cap=e_cap),
-        mode="exact")
+    def report(step, loss, acc):
+        print(f"step {step:4d}  loss {loss:.4f}  full-graph acc {acc:.4f}")
 
-    @jax.jit
-    def train_step(params, opt_state, step):
-        key = S.step_key(0, step)                       # shared seed + step
-        mb = builder.build_single(key, rp, ci, val, feats, labels)
-        def loss_fn(p):
-            logits = M.forward(p, mb.adj, mb.feats, cfg, dropout_key=key,
-                               train=True)
-            return M.cross_entropy_loss(logits, mb.labels)
-        loss, grads = jax.value_and_grad(loss_fn)(params)
-        params, opt_state = opt.update(params, grads, opt_state)
-        return params, opt_state, loss
-
-    dense = jnp.array(csr_to_dense(A))
-    test = jnp.array(ds.test_mask)
-    for step in range(200):
-        params, opt_state, loss = train_step(params, opt_state,
-                                             jnp.asarray(step))
-        if step % 50 == 0:
-            logits = M.forward(params, dense, feats, cfg, train=False)
-            acc = float(M.accuracy(logits, labels, test))
-            print(f"step {step:4d}  loss {float(loss):.4f}  "
-                  f"test acc {acc:.4f}")
-    logits = M.forward(params, dense, feats, cfg, train=False)
-    print(f"final test accuracy: "
-          f"{float(M.accuracy(logits, labels, test)):.4f}")
+    state, log = trainer.run(state, graph, report=report)
+    print(f"final full-graph accuracy: "
+          f"{float(trainer.eval_fn(state.params, graph)):.4f}")
 
 
 if __name__ == "__main__":

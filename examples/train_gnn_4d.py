@@ -2,7 +2,9 @@
 
 This is the paper's full system — communication-free distributed sampling,
 3D PMM with layer rotation, data parallelism, and the §V optimizations —
-running on a 16-device host mesh (G_d=2 x 2x2x2 grid).
+running on a 16-device host mesh (G_d=2 x 2x2x2 grid) through the
+``repro.train`` runtime: 8-step scan chunks with the §V-A prefetch carry
+folded into the scan state, and one eval per report boundary.
 
     XLA_FLAGS=--xla_force_host_platform_device_count=16 \
     PYTHONPATH=src python examples/train_gnn_4d.py
@@ -17,10 +19,10 @@ if len(os.environ.get("XLA_FLAGS", "")) == 0:
     env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=16"
     raise SystemExit(subprocess.call([sys.executable] + sys.argv, env=env))
 
-sys.argv = [sys.argv[0], "--dataset", "ogbn-products",
-            "--vertices", "4096", "--gd", "2", "--g", "2",
-            "--batch", "512", "--steps", "200", "--dropout", "0.2",
-            "--bf16-collectives", "--prefetch",
-            "--target-acc", "0.93"]
 from repro.launch.train import main   # noqa: E402
-main()
+
+main(["--dataset", "ogbn-products",
+      "--vertices", "4096", "--gd", "2", "--g", "2",
+      "--batch", "512", "--steps", "200", "--dropout", "0.2",
+      "--bf16-collectives", "--prefetch", "--chunk-size", "8",
+      "--eval-every", "24", "--target-acc", "0.93"])

@@ -13,11 +13,14 @@ from repro.core.gcn_model import (
     GCNConfig, init_params, forward, sage_forward, cross_entropy_loss,
     accuracy, rmsnorm,
 )
+from repro.core.forward import ForwardEngine
 from repro.core.fourd import (
     TrainOptions, FourDPlan, make_mesh_4d, build_plan, make_loss_fn,
     make_train_step, make_eval_step, param_specs, graph_data_specs,
 )
-from repro.core.pipeline import PrefetchState, make_prefetched_train_step
+from repro.core.pipeline import (
+    PrefetchState, make_pipeline_fns, make_prefetched_train_step,
+)
 from repro.core import compat, pmm3d, baselines, precision
 
 __all__ = [
@@ -29,9 +32,10 @@ __all__ = [
     "BlockFormat", "GraphShards", "Minibatch", "MinibatchBuilder",
     "GCNConfig", "init_params", "forward", "sage_forward",
     "cross_entropy_loss", "accuracy", "rmsnorm",
+    "ForwardEngine",
     "TrainOptions", "FourDPlan", "make_mesh_4d", "build_plan",
     "make_loss_fn", "make_train_step", "make_eval_step", "param_specs",
     "graph_data_specs",
-    "PrefetchState", "make_prefetched_train_step",
+    "PrefetchState", "make_pipeline_fns", "make_prefetched_train_step",
     "compat", "pmm3d", "baselines", "precision",
 ]

@@ -1,0 +1,242 @@
+"""The ONE distributed layer-loop executor (ScaleGNN §III/§IV).
+
+Every consumer of the 3D-PMM GCN program — the 4D train step
+(``fourd.make_loss_fn``), full-graph eval (``fourd.make_eval_step``), the
+§V-A prefetched pipeline (``core/pipeline.py``), and distributed serving
+(``serve/distributed.py``) — used to carry its own copy of the layer loop
+(SpMM -> GEMM -> residual reshard -> elementwise tail -> rotate), with the
+SpMM backend picked by ``isinstance(blk, tuple)`` checks and a mid-loop
+import. CAGNET-style work (Tripathy et al.) shows this exact loop is where
+1.5D/3D aggregation variants plug in, so it lives in ONE place now:
+
+``ForwardEngine`` runs the layer program parameterized by
+
+* an **aggregation backend** — how one layer's ``A @ H`` is computed:
+    - ``"dense"``  the mini-batch block is a dense (b, b) array; plain PMM
+                   matmul + psum (Eq. 27),
+    - ``"ell"``    the block is a block-ELL ``(tiles, colidx)`` pair; the
+                   Pallas SpMM kernel + psum (§Perf H3.4),
+    - ``"csr"``    the block is a padded-CSR ``(rp, ci, val)`` triple over
+                   the *full local* graph shard; local sparse SpMM + psum
+                   (full-graph eval, where densifying an
+                   (n_local, n_local) block would be wasteful);
+* a **precision policy** — bf16 PMM all-reduces (§V-B) via
+  ``TrainOptions.bf16_collectives`` (FP32 loss/norm reductions stay FP32
+  inside ``pmm3d``);
+* the **elementwise tail** — RMSNorm -> ReLU -> dropout -> residual
+  (Eqs. 7-10), either as separate jnp ops (reference) or through the §V-C
+  fused Pallas kernel (``TrainOptions.fused_elementwise``): fully fused
+  when the RMSNorm reduction is device-local (``grid_side == 1`` or
+  RMSNorm off), otherwise the distributed norm (FP32 psum) followed by the
+  fused ReLU/dropout/residual kernel.
+
+The engine runs *inside* ``shard_map`` over the ``(x, y, z)`` PMM axes
+(with the DP axis ``d`` wrapped around it by the callers); all fields are
+static so an engine instance is jit-stable.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import pmm3d
+from repro.core.gcn_model import GCNConfig
+from repro.kernels import ops as kops
+
+BACKENDS = ("dense", "ell", "csr")
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainOptions:
+    """Optimization toggles for the distributed step (paper §V)."""
+
+    bf16_collectives: bool = False     # §V-B
+    fused_elementwise: bool = False    # §V-C
+    reshard_impl: str = "gather"       # §IV-C4 / §Perf
+    dropout: float = 0.0               # dropout inside the distributed model
+    seed: int = 0
+    # §Perf H3.3 (beyond-paper): dtype of the extracted dense mini-batch
+    # adjacency blocks. bf16 halves the dominant memory stream of the 4D
+    # step (the B x B blocks) while the SpMM accumulates in f32.
+    block_dtype: str = "f32"           # "f32" | "bf16"
+    # §Perf H3.4 (beyond-paper): extract the mini-batch adjacency directly
+    # into block-ELL and run the SpMM through the Pallas kernel — at
+    # production scale the sampled blocks are >99% tile-sparse, so this
+    # cuts the dominant memory term by the tile-density factor.
+    spmm_impl: str = "dense"           # "dense" | "ell"
+    ell_tile: int = 128                # (bm = bn) MXU-aligned tile side
+    ell_slots: int = 16                # max nonzero col-tiles per row-block
+    # Extraction backend for the mini-batch blocks: "jax" (reference, COO
+    # triples through HBM) or "pallas" (kernels/extract_gather.py — Alg. 2
+    # phases 2-4 fused in one kernel).
+    extract_impl: str = "jax"          # "jax" | "pallas"
+
+
+def _dropout_key(opts: TrainOptions, step: jax.Array, layer: int,
+                 row_axis: str, rep_axis: str,
+                 dp_axis: Optional[str]) -> jax.Array:
+    """Per-block dropout key. Folded with the (row, rep) block coords only —
+    replicas along the col axis MUST use the identical mask, or the psum
+    replicas diverge (DESIGN.md §4)."""
+    k = jax.random.PRNGKey(opts.seed + 1)
+    k = jax.random.fold_in(k, step)
+    k = jax.random.fold_in(k, layer)
+    k = jax.random.fold_in(k, jax.lax.axis_index(row_axis))
+    k = jax.random.fold_in(k, jax.lax.axis_index(rep_axis))
+    if dp_axis is not None:
+        k = jax.random.fold_in(k, jax.lax.axis_index(dp_axis))
+    return k
+
+
+def _fused_row_tile(b: int) -> int:
+    """Largest kernel row tile that divides the local batch (the Pallas tail
+    requires rows % tile == 0; mini-batch blocks are powers of two in
+    practice, so this is 256 except for tiny/odd test shapes)."""
+    return 256 if b % 256 == 0 else b
+
+
+@dataclasses.dataclass(frozen=True)
+class ForwardEngine:
+    """The §III/§IV layer program: input projection, L layers of
+    [aggregate -> GEMM -> tail], output head. See module docstring.
+
+    ``grid_side`` is the static 3D-grid side ``g``: it decides whether the
+    fused tail may own the RMSNorm reduction (the feature dim is whole on
+    every device iff g == 1). ``csr_rows`` is the local row count of the
+    CSR shards (backend "csr" only).
+    """
+
+    cfg: GCNConfig
+    opts: TrainOptions
+    backend: str = "dense"            # "dense" | "ell" | "csr"
+    grid_side: int = 1
+    csr_rows: int = 0
+    dp_axis: Optional[str] = "d"      # dropout-key fold; None = no DP axis
+
+    def __post_init__(self):
+        assert self.backend in BACKENDS, self.backend
+        if self.backend == "csr":
+            assert self.csr_rows > 0, (
+                "backend 'csr' needs the static local row count (csr_rows)")
+
+    @classmethod
+    def from_options(cls, cfg: GCNConfig, opts: TrainOptions, *,
+                     grid_side: int,
+                     backend: Optional[str] = None,
+                     csr_rows: int = 0,
+                     dp_axis: Optional[str] = "d") -> "ForwardEngine":
+        """The standard construction: the aggregation backend follows the
+        mini-batch block format (``TrainOptions.spmm_impl``) unless
+        overridden (eval passes ``backend="csr"``)."""
+        return cls(cfg=cfg, opts=opts, backend=backend or opts.spmm_impl,
+                   grid_side=grid_side, csr_rows=csr_rows, dp_axis=dp_axis)
+
+    # -- the three aggregation backends (one layer's A @ H + psum) -----------
+
+    def aggregate(self, blk: Any, h: jax.Array,
+                  st: pmm3d.PlaneState) -> jax.Array:
+        """SpMM (Eq. 5 / 27): A (p, r) @ H (r, c) -> psum r -> (p, c)."""
+        bf16 = self.opts.bf16_collectives
+        if self.backend == "ell":                 # block-ELL (tiles, colidx)
+            return pmm3d.psum_maybe_bf16(
+                kops.spmm_ell(blk[0], blk[1], h), st.row, bf16)
+        if self.backend == "csr":                 # padded-CSR (rp, ci, val)
+            rp, ci, val = blk
+            return pmm3d.psum_maybe_bf16(
+                pmm3d.csr_spmm_local(rp, ci, val, h, self.csr_rows),
+                st.row, bf16)
+        return pmm3d.pmm_matmul(blk, h, st.row, bf16=bf16)
+
+    # -- the elementwise tail (Eqs. 7-10), reference or fused §V-C -----------
+
+    def tail(self, conv: jax.Array, residual: Optional[jax.Array],
+             scale: jax.Array, st: pmm3d.PlaneState,
+             dropout_key: Optional[jax.Array], train: bool) -> jax.Array:
+        """RMSNorm -> ReLU -> dropout -> residual on the local block.
+
+        ``conv`` is on plane (p, r): rows over p, cols over r (rep c).
+        RMSNorm reduces over r. The residual arrives already resharded to
+        (p, r)."""
+        cfg, opts = self.cfg, self.opts
+        residual = residual if cfg.use_residual else None
+        dropping = train and opts.dropout > 0 and dropout_key is not None
+
+        if opts.fused_elementwise:
+            mask = None
+            if dropping:
+                mask = jax.random.bernoulli(dropout_key, 1.0 - opts.dropout,
+                                            conv.shape)
+            if not cfg.use_rmsnorm or self.grid_side == 1:
+                # feature dim whole on-device: one fused HBM round-trip
+                return kops.fused_layer_tail(
+                    conv, residual, scale, dropout_mask=mask,
+                    dropout_rate=opts.dropout, eps=cfg.rms_eps,
+                    use_rmsnorm=cfg.use_rmsnorm, use_relu=cfg.use_relu,
+                    row_tile=_fused_row_tile(conv.shape[0]))
+            # feature dim sharded over r: the mean-of-squares needs the FP32
+            # psum (§V-B), then the fused kernel owns ReLU/dropout/residual
+            h = pmm3d.parallel_rmsnorm(conv, scale, st.row, cfg.d_hidden,
+                                       cfg.rms_eps)
+            return kops.fused_layer_tail(
+                h, residual, scale, dropout_mask=mask,
+                dropout_rate=opts.dropout, eps=cfg.rms_eps,
+                use_rmsnorm=False, use_relu=cfg.use_relu,
+                row_tile=_fused_row_tile(conv.shape[0]))
+
+        # reference: separate jnp ops (XLA decides the fusion)
+        if cfg.use_rmsnorm:
+            h = pmm3d.parallel_rmsnorm(conv, scale, st.row, cfg.d_hidden,
+                                       cfg.rms_eps)
+        else:
+            h = conv
+        if cfg.use_relu:
+            h = jax.nn.relu(h)
+        if dropping:
+            keep = jax.random.bernoulli(dropout_key, 1.0 - opts.dropout,
+                                        h.shape)
+            h = jnp.where(keep, h / (1.0 - opts.dropout), 0.0)
+        if residual is not None:
+            h = h + residual
+        return h
+
+    # -- the layer program ---------------------------------------------------
+
+    def __call__(self, params, adj_blocks: Sequence[Any], x_local: jax.Array,
+                 *, step: jax.Array, train: bool
+                 ) -> Tuple[jax.Array, pmm3d.PlaneState]:
+        """§III forward under 3D PMM. ``adj_blocks[l % len]`` is this
+        device's adjacency block for layer l's rotation plane, in the
+        backend's format (dense array, ELL pair, or CSR triple).
+        ``x_local`` is the local feature block on plane (x, z).
+
+        Returns logits on plane (r_L, p_L) and the final PlaneState.
+        """
+        cfg, opts = self.cfg, self.opts
+        bf16 = opts.bf16_collectives
+        st = pmm3d.initial_state()
+
+        # input projection (Eq. 4): IN (x, z) @ W_in (z, y) -> psum z ->
+        # F (x, y)
+        h = pmm3d.pmm_matmul(x_local, params["w_in"], "z", bf16=bf16)
+
+        for li, layer in enumerate(params["layers"]):
+            agg = self.aggregate(adj_blocks[li % len(adj_blocks)], h, st)
+            # GEMM (Eq. 6 / 28): H (p, c) @ W (c, r) -> psum c -> conv (p, r)
+            conv = pmm3d.pmm_matmul(agg, layer["w"], st.col, bf16=bf16)
+            # residual must move (r, c) -> (p, r) (paper §IV-C4)
+            res = None
+            if cfg.use_residual:
+                res = pmm3d.reshard(h, st, (st.rep, st.row),
+                                    impl=opts.reshard_impl)
+            dk = (_dropout_key(opts, step, li, st.rep, st.row, self.dp_axis)
+                  if train and opts.dropout > 0 else None)
+            h = self.tail(conv, res, layer["rms_scale"], st, dk, train)
+            st = st.rotate()
+
+        # output head (Eq. 11): X (r, c) @ W_out (c, p) -> psum c ->
+        # logits (r, p) rep c
+        logits = pmm3d.pmm_matmul(h, params["w_out"], st.col, bf16=bf16)
+        return logits, st

@@ -31,7 +31,7 @@ from jax.sharding import PartitionSpec as P
 
 from repro.core import pmm3d
 from repro.core.compat import shard_map
-from repro.core.fourd import FourDPlan, distributed_forward
+from repro.core.fourd import FourDPlan
 from repro.core.minibatch import BlockFormat, GraphShards, Minibatch
 
 
@@ -70,19 +70,21 @@ def _minibatch_specs(plan: FourDPlan) -> Minibatch:
                      labels=P("d", r_f))
 
 
-def make_prefetched_train_step(plan: FourDPlan, optimizer):
-    """Build (sample_fn, step_fn):
+def make_pipeline_fns(plan: FourDPlan):
+    """The two un-jitted halves of the §V-A pipeline, shared by the legacy
+    per-step ``make_prefetched_train_step`` and the scan-chunked runtime
+    (``repro.train``), which folds the prefetch carry into its scan state:
 
-    * ``sample_fn(graph, step)`` materializes mini-batch ``step`` (used once
-      for warm-up).
-    * ``step_fn(state, graph, step)`` consumes the carried batch, prefetches
-      batch ``step + 1`` inside the same XLA program, and applies the
-      optimizer. Returns (state', loss).
+    * ``sample_fn(graph, step) -> Minibatch`` — materialize batch ``step``
+      (the sharded sampling shard_map; warm-up and in-step prefetch).
+    * ``loss_fn(params, minibatch, step) -> (G_d,)`` — consume a carried
+      batch through the ONE ``ForwardEngine`` (``core/forward.py``).
     """
-    cfg, opts, builder = plan.cfg, plan.opts, plan.builder
+    cfg, builder = plan.cfg, plan.builder
     mesh = plan.mesh
     ds = plan.data_specs
     mb_specs = _minibatch_specs(plan)
+    engine = plan.engine()
 
     def local_sample(shards: GraphShards, feats, labels, step) -> Minibatch:
         mb = builder.build_local(shards.squeeze_blocks(), feats, labels,
@@ -101,22 +103,34 @@ def make_prefetched_train_step(plan: FourDPlan, optimizer):
 
     def local_loss(params, mb: Minibatch, step):
         mb = mb.strip_leading()
-        logits, st = distributed_forward(
-            params, mb.adj, mb.feats, cfg, opts, step=step, train=True)
+        logits, st = engine(params, mb.adj, mb.feats, step=step, train=True)
         nll_sum, cnt = pmm3d.parallel_cross_entropy(
             logits, mb.labels, class_axis=st.rep, row_axis=st.row,
             n_classes=cfg.num_classes)
         return (nll_sum / jnp.maximum(cnt, 1.0))[None]
 
-    loss_sharded = shard_map(
+    loss_fn = shard_map(
         local_loss, mesh=mesh,
         in_specs=(plan.p_specs, mb_specs, P()),
         out_specs=P("d"), check_vma=False)
+    return sample_fn, loss_fn
+
+
+def make_prefetched_train_step(plan: FourDPlan, optimizer):
+    """Build (sample_fn, step_fn):
+
+    * ``sample_fn(graph, step)`` materializes mini-batch ``step`` (used once
+      for warm-up).
+    * ``step_fn(state, graph, step)`` consumes the carried batch, prefetches
+      batch ``step + 1`` inside the same XLA program, and applies the
+      optimizer. Returns (state', loss).
+    """
+    sample_fn, loss_fn = make_pipeline_fns(plan)
 
     @jax.jit
     def step_fn(state: PrefetchState, graph, step):
         def mean_loss(p):
-            return loss_sharded(p, state.minibatch, step).mean()
+            return loss_fn(p, state.minibatch, step).mean()
         loss, grads = jax.value_and_grad(mean_loss)(state.params)
         # prefetch: data-independent of the grads above -> overlappable
         next_mb = sample_fn(graph, step + 1)

@@ -82,11 +82,11 @@ def block_density(adj, bm: int, bn: int):
 def _fused_core(x, scale, extras, has_mask, has_res, dropout_rate, eps,
                 flags):
     mask, res = extras
-    use_rmsnorm, use_relu = flags
+    use_rmsnorm, use_relu, row_tile = flags
     return _fused.fused_layer_pallas(
         x, scale, mask if has_mask else None, res if has_res else None,
         dropout_rate=dropout_rate, eps=eps, use_rmsnorm=use_rmsnorm,
-        use_relu=use_relu, interpret=INTERPRET)
+        use_relu=use_relu, row_tile=row_tile, interpret=INTERPRET)
 
 
 def _fused_fwd(x, scale, extras, has_mask, has_res, dropout_rate, eps,
@@ -99,7 +99,7 @@ def _fused_fwd(x, scale, extras, has_mask, has_res, dropout_rate, eps,
 def _fused_bwd(has_mask, has_res, dropout_rate, eps, flags, resid, g):
     """Backward of Eq. 7-10 in plain jnp (element-wise; XLA fuses it)."""
     x, scale, (mask, res) = resid
-    use_rmsnorm, use_relu = flags
+    use_rmsnorm, use_relu, _ = flags
     g = g.astype(jnp.float32)
     x32 = x.astype(jnp.float32)
 
@@ -148,6 +148,7 @@ def fused_layer_tail(
     eps: float = 1e-6,
     use_rmsnorm: bool = True,
     use_relu: bool = True,
+    row_tile: int = 256,
 ) -> jax.Array:
     """Public fused RMSNorm+ReLU+dropout+residual (paper §V-C)."""
     has_mask = dropout_mask is not None
@@ -157,7 +158,7 @@ def fused_layer_tail(
     res = residual if has_res else jnp.zeros((b, d), x.dtype)
     return _fused_core(x, scale, (mask, res), has_mask, has_res,
                        float(dropout_rate), float(eps),
-                       (use_rmsnorm, use_relu))
+                       (use_rmsnorm, use_relu, int(row_tile)))
 
 
 def fused_layer_ref(*args, **kwargs):

@@ -1,8 +1,13 @@
-"""End-to-end GNN training driver (the paper's workload).
+"""End-to-end GNN training driver (the paper's workload) — a thin CLI over
+the ``repro.train`` runtime.
 
 Runs ScaleGNN 4D training on a synthetic stand-in dataset on the local
 device set (use XLA_FLAGS=--xla_force_host_platform_device_count=N to get
-a multi-device host mesh). Example::
+a multi-device host mesh). The loop itself is ``train.Trainer``:
+scan-chunked steps (``--chunk-size``), §V-A prefetch folded into the scan
+carry (``--prefetch``), one eval per report boundary, and full-state
+checkpointing (``--ckpt-dir``/``--ckpt-every``) with ``--resume`` picking
+up bit-identically from the latest saved ``TrainState``. Example::
 
     XLA_FLAGS=--xla_force_host_platform_device_count=16 \\
     PYTHONPATH=src python -m repro.launch.train \\
@@ -15,15 +20,14 @@ import argparse
 import time
 
 import jax
-import jax.numpy as jnp
 
-from repro.checkpoint import save_checkpoint
-from repro.core import fourd, gcn_model as GM, pipeline as PL
+from repro.core import fourd, gcn_model as GM
 from repro.graphs import build_partitioned_graph, get_dataset
 from repro.optim import AdamW, linear_warmup_cosine
+from repro.train import Trainer, TrainLoopConfig
 
 
-def main():
+def build_argparser() -> argparse.ArgumentParser:
     ap = argparse.ArgumentParser()
     ap.add_argument("--dataset", default="ogbn-products")
     ap.add_argument("--vertices", type=int, default=8192)
@@ -41,11 +45,22 @@ def main():
                     choices=["gather", "permute"])
     ap.add_argument("--prefetch", action="store_true",
                     help="overlap sampling with training (paper §V-A)")
+    ap.add_argument("--chunk-size", type=int, default=8,
+                    help="optimizer steps per lax.scan dispatch")
     ap.add_argument("--target-acc", type=float, default=None)
     ap.add_argument("--eval-every", type=int, default=25)
     ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=0,
+                    help="steps between full-state checkpoints (0 = only "
+                         "the final state)")
+    ap.add_argument("--resume", action="store_true",
+                    help="continue from the latest TrainState in --ckpt-dir")
     ap.add_argument("--seed", type=int, default=0)
-    args = ap.parse_args()
+    return ap
+
+
+def main(argv=None):
+    args = build_argparser().parse_args(argv)
 
     n_need = args.gd * args.g ** 3
     assert len(jax.devices()) >= n_need, (
@@ -66,59 +81,60 @@ def main():
         reshard_impl=args.reshard, dropout=args.dropout, seed=args.seed)
     plan = fourd.build_plan(pg, cfg, mesh, batch=args.batch, opts=opts)
 
-    params = plan.shard_params(
-        GM.init_params(jax.random.PRNGKey(args.seed), cfg))
     graph = plan.shard_graph(pg)
     opt = AdamW(lr=linear_warmup_cosine(args.lr, 20, args.steps),
                 weight_decay=1e-4, grad_clip=1.0)
-    opt_state = opt.init(params)
-    eval_step = fourd.make_eval_step(plan)
+    loop = TrainLoopConfig(
+        total_steps=args.steps, chunk_size=args.chunk_size,
+        prefetch=args.prefetch, eval_every=args.eval_every,
+        target_acc=args.target_acc, ckpt_dir=args.ckpt_dir,
+        ckpt_every=args.ckpt_every)
+    trainer = Trainer(plan, opt, loop)
+
+    state = trainer.init_state(
+        plan.shard_params(GM.init_params(jax.random.PRNGKey(args.seed), cfg)),
+        graph)
+    if args.resume:
+        # a silent fresh start would discard the run --resume promised to
+        # continue — fail loudly instead
+        if not args.ckpt_dir:
+            raise SystemExit("--resume requires --ckpt-dir")
+        restored = trainer.restore(state)
+        if restored is None:
+            raise SystemExit(
+                f"--resume: no TrainState checkpoint in {args.ckpt_dir}")
+        state = restored
+        print(f"resumed: step {int(state.step)}")
 
     print(f"ScaleGNN 4D: mesh {dict(mesh.shape)}  dataset {ds.name} "
           f"N={pg.n} E={ds.num_edges} batch={args.batch} "
-          f"prefetch={args.prefetch}")
+          f"prefetch={args.prefetch} chunk={args.chunk_size}")
 
     t0 = time.time()
-    if args.prefetch:
-        sample_fn, step_fn = PL.make_prefetched_train_step(plan, opt)
-        state = PL.PrefetchState(params, opt_state,
-                                 sample_fn(graph, jnp.asarray(0)))
-        for step in range(args.steps):
-            state, loss = step_fn(state, graph, jnp.asarray(step))
-            params = state.params
-            _maybe_report(args, eval_step, params, graph, step, loss, t0)
-            if _reached_target(args, eval_step, params, graph, step):
-                break
-    else:
-        train_step = fourd.make_train_step(plan, opt)
-        for step in range(args.steps):
-            params, opt_state, loss = train_step(
-                params, opt_state, graph, jnp.asarray(step))
-            _maybe_report(args, eval_step, params, graph, step, loss, t0)
-            if _reached_target(args, eval_step, params, graph, step):
-                break
 
-    acc = float(eval_step(params, graph))
+    def report(step, loss, acc):
+        print(f"step {step:5d}  loss {loss:.4f}  "
+              f"full-graph acc {acc:.4f}  t={time.time()-t0:.1f}s")
+
+    state, log = trainer.run(state, graph, report=report)
+
+    # the final accuracy: reuse the boundary eval when it already covered
+    # the last step (never evaluate twice for one report)
+    if log.evals and log.evals[-1][0] == int(state.step):
+        acc = log.evals[-1][1]
+    else:
+        acc = float(trainer.eval_fn(state.params, graph))
     dt = time.time() - t0
     print(f"done: steps<= {args.steps}  time {dt:.1f}s  "
           f"full-graph accuracy {acc:.4f}")
     if args.ckpt_dir:
-        path = save_checkpoint(args.ckpt_dir, args.steps,
-                               jax.device_get(params))
-        print("checkpoint:", path)
-
-
-def _maybe_report(args, eval_step, params, graph, step, loss, t0):
-    if step % args.eval_every == 0:
-        acc = float(eval_step(params, graph))
-        print(f"step {step:5d}  loss {float(loss):.4f}  "
-              f"full-graph acc {acc:.4f}  t={time.time()-t0:.1f}s")
-
-
-def _reached_target(args, eval_step, params, graph, step):
-    if args.target_acc is None or step % args.eval_every:
-        return False
-    return float(eval_step(params, graph)) >= args.target_acc
+        # run() already saved this exact state when the last step landed on
+        # a --ckpt-every boundary; don't fetch and write it twice
+        if args.ckpt_every and int(state.step) % args.ckpt_every == 0:
+            print(f"checkpoint: step {int(state.step)} (saved at boundary)")
+        else:
+            path = trainer.save(state)
+            print("checkpoint:", path)
 
 
 if __name__ == "__main__":

@@ -13,8 +13,8 @@ eval step:
   communication-free Alg.-2 extraction of its local ``(b_loc, b_loc)``
   adjacency block through ``MinibatchBuilder.extract_block`` (the identical
   per-device assembly the 4D train step uses — ROADMAP 'one step closer'),
-  then the 3D-PMM GCN forward (``fourd.distributed_forward``) with one
-  all-reduce per matmul;
+  then the 3D-PMM GCN forward (the ONE ``core/forward.py`` engine) with
+  one all-reduce per matmul;
 * the ``d`` axis serves ``dp`` *independent stacked micro-batches* per
   device call — continuous batching across data-parallel groups, which is
   what the threaded driver keeps fed.
@@ -24,7 +24,7 @@ pools are pure functions of ``(seed, range)``, so any replica planning the
 same micro-batch derives the identical batch with zero coordination.
 
 Everything reuses the training machinery — ``param_specs`` /
-``graph_data_specs`` / ``GraphShards`` / ``distributed_forward`` — and the
+``graph_data_specs`` / ``GraphShards`` / ``ForwardEngine`` — and the
 ``core/compat.py`` shims, so it runs on jax 0.4.x as well as current
 releases. A ``(1, 1, 1)`` mesh is the single-device special case and the
 correctness oracle (``tests/test_serve_distributed.py``).
@@ -42,6 +42,7 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from repro.core import fourd, pmm3d
 from repro.core import sampling as smp
 from repro.core.compat import shard_map
+from repro.core.forward import ForwardEngine
 from repro.core.gcn_model import GCNConfig
 from repro.core.minibatch import GraphShards, MinibatchBuilder
 from repro.graphs.csr import CSRMatrix
@@ -126,8 +127,8 @@ def build_serve_plan(A: CSRMatrix, features: np.ndarray, cfg: GCNConfig,
 
     The per-device body is ``MinibatchBuilder.extract_block`` per rotation
     plane (communication-free — the batch ids are replicated, the adjacency
-    shard is local) followed by ``fourd.distributed_forward``; the only
-    collectives are the PMM all-reduces of the forward itself.
+    shard is local) followed by the ``ForwardEngine`` layer program; the
+    only collectives are the PMM all-reduces of the forward itself.
     """
     g = int(mesh.shape["x"])
     assert mesh.shape["y"] == g and mesh.shape["z"] == g, (
@@ -153,6 +154,10 @@ def build_serve_plan(A: CSRMatrix, features: np.ndarray, cfg: GCNConfig,
     ds = fourd.graph_data_specs()
     n_cls_pad = fourd.padded_class_count(cfg.num_classes, g)
     st_f = pmm3d.state_after_layers(cfg.num_layers)
+    # serving blocks are extracted dense (builder fmt above), whatever
+    # opts.spmm_impl says about training
+    engine = ForwardEngine.from_options(cfg, opts, grid_side=g,
+                                        backend="dense")
 
     def local_serve(params, shards: GraphShards, feats, ids, scale):
         # ids/scale arrive (1, g, b_loc) per device: one micro-batch per DP
@@ -165,9 +170,8 @@ def build_serve_plan(A: CSRMatrix, features: np.ndarray, cfg: GCNConfig,
             shards, ids, cfg.num_layers,
             col_scale_fn=lambda i, j: scale[j])
         x_local = builder.local_rows(feats, ids, "x")
-        logits, _ = fourd.distributed_forward(
-            params, blocks, x_local, cfg, opts,
-            step=jnp.zeros((), jnp.int32), train=False)
+        logits, _ = engine(params, blocks, x_local,
+                           step=jnp.zeros((), jnp.int32), train=False)
         return logits[None]                   # re-add the 'd' dim
 
     in_specs = (p_specs, GraphShards.specs(ds), ds["features"],

@@ -1,0 +1,17 @@
+"""repro.train — the scan-chunked 4D training runtime.
+
+``TrainState`` (the one loop-state pytree) + ``Trainer`` (scan-chunked
+epochs with buffer donation, §V-A prefetch folded into the scan carry,
+single-eval reporting, full-state checkpoint/resume). ``launch/train.py``
+is a thin CLI over this package; examples and benchmarks reuse it instead
+of hand-rolled loops.
+"""
+from repro.train.runner import (
+    CKPT_NAME, RunLog, Trainer, TrainLoopConfig,
+)
+from repro.train.state import TrainState, init_train_state
+
+__all__ = [
+    "CKPT_NAME", "RunLog", "Trainer", "TrainLoopConfig",
+    "TrainState", "init_train_state",
+]

@@ -1,0 +1,214 @@
+"""The scan-chunked training runtime.
+
+The legacy driver (``launch/train.py`` before this module existed) ran a
+per-step Python loop: every step re-dispatched a jitted function from the
+host, double-evaluated at report steps (once for the report, once for the
+target-accuracy check), and could only save bare params at the very end —
+``checkpoint.load_checkpoint`` was never called on the train path, so no
+run could resume.
+
+``Trainer`` replaces that loop:
+
+* **scan-chunked epochs** — ``chunk_size`` optimizer steps run inside ONE
+  ``lax.scan`` per host dispatch, so per-step Python/dispatch overhead is
+  paid once per chunk (measured by the fig6 scan-chunk ablation). The
+  §V-A prefetch carry (the next step's ``Minibatch``) is part of the scan
+  state, so sampling overlap needs no per-step Python either.
+* **buffer donation** — the ``TrainState`` argument is donated to the
+  chunk, so params/optimizer/minibatch buffers are updated in place
+  instead of doubling peak memory.
+* **eval at chunk boundaries** — one eval per report boundary, used for
+  BOTH the report and the target-accuracy stop (the legacy loop's
+  double-eval bug is structurally gone).
+* **full-state checkpoint/resume** — ``save()`` writes the whole
+  ``TrainState`` (params, opt state, step, prefetch carry) through the
+  existing ``checkpoint/ckpt.py`` API; ``restore()`` + ``run()`` continue
+  bit-identically, because sampling and dropout keys are pure functions of
+  ``(seed, step)`` and the step counter travels in the state.
+
+The loss math is the unchanged 4D path: the non-prefetch body consumes
+``fourd.make_loss_fn`` (sampling inside the step), the prefetch body the
+``pipeline.make_pipeline_fns`` pair — both through the ONE
+``core/forward.py`` engine.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import latest_step, load_checkpoint, save_checkpoint
+from repro.core import fourd
+from repro.core import pipeline as PL
+from repro.train.state import TrainState, init_train_state
+
+CKPT_NAME = "state"          # full-TrainState checkpoints (vs bare "ckpt")
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainLoopConfig:
+    """Host-side knobs of the runtime (all static)."""
+
+    total_steps: int
+    chunk_size: int = 8        # optimizer steps per lax.scan dispatch
+    prefetch: bool = False     # §V-A: fold the sampling carry into the scan
+    eval_every: int = 0        # steps between evals (0 = never), rounded
+                               # up to the enclosing chunk boundary
+    target_acc: Optional[float] = None   # stop once an eval reaches this
+    ckpt_dir: Optional[str] = None
+    ckpt_every: int = 0        # steps between full-state saves (0 = never),
+                               # rounded up to the enclosing chunk boundary
+
+    def __post_init__(self):
+        assert self.total_steps >= 0 and self.chunk_size > 0
+        assert self.target_acc is None or self.eval_every > 0, (
+            "target_acc is only checked at eval boundaries; set eval_every")
+
+
+@dataclasses.dataclass
+class RunLog:
+    """What ``Trainer.run`` observed: the per-step loss sequence (in step
+    order, one entry per optimizer step run), the (step, accuracy) evals,
+    and whether the target accuracy stopped the run early."""
+
+    losses: List[float] = dataclasses.field(default_factory=list)
+    evals: List[Tuple[int, float]] = dataclasses.field(default_factory=list)
+    hit_target: bool = False
+
+
+class Trainer:
+    """The runtime over a ``FourDPlan``: build once, then
+    ``init_state`` / ``restore`` -> ``run`` -> ``save``.
+
+    ``eval_fn`` defaults to the plan's full-graph eval step
+    (``fourd.make_eval_step``); tests inject a counting wrapper.
+    """
+
+    def __init__(self, plan: fourd.FourDPlan, optimizer,
+                 loop: TrainLoopConfig, *,
+                 eval_fn: Optional[Callable] = None):
+        self.plan = plan
+        self.optimizer = optimizer
+        self.loop = loop
+        if loop.prefetch:
+            self._sample_fn, self._mb_loss_fn = PL.make_pipeline_fns(plan)
+        else:
+            self._loss_fn = fourd.make_loss_fn(plan, train=True)
+        self.eval_fn = eval_fn if eval_fn is not None \
+            else fourd.make_eval_step(plan)
+        self._chunks = {}          # scan length -> jitted chunk fn
+
+    # -- state construction --------------------------------------------------
+
+    def init_state(self, params, graph) -> TrainState:
+        """Fresh state at step 0 (with the warm-up batch when prefetching)."""
+        mb = (self._sample_fn(graph, jnp.zeros((), jnp.int32))
+              if self.loop.prefetch else None)
+        return init_train_state(params, self.optimizer.init(params), mb)
+
+    def save(self, state: TrainState, directory: Optional[str] = None) -> str:
+        """Write the FULL state (params, opt state, step, prefetch carry)
+        atomically; the filename carries the step."""
+        directory = directory or self.loop.ckpt_dir
+        assert directory, "no checkpoint directory configured"
+        return save_checkpoint(directory, int(state.step),
+                               jax.device_get(state), name=CKPT_NAME)
+
+    def restore(self, example_state: TrainState,
+                directory: Optional[str] = None,
+                step: Optional[int] = None) -> Optional[TrainState]:
+        """Latest (or given-step) full-state checkpoint, restored into the
+        structure/shapes of ``example_state``; None when there is none.
+        The FIRST exercise of ``load_checkpoint`` on the train path."""
+        directory = directory or self.loop.ckpt_dir
+        assert directory, "no checkpoint directory configured"
+        if step is None:
+            step = latest_step(directory, name=CKPT_NAME)
+            if step is None:
+                return None
+        state, _ = load_checkpoint(directory, step, example_state,
+                                   name=CKPT_NAME)
+        return state
+
+    # -- the scan-chunked step -----------------------------------------------
+
+    def compiled_chunk(self, length: int):
+        """The jitted ``(state, graph) -> (state', (length,) losses)`` chunk:
+        ``length`` optimizer steps in one ``lax.scan``, state donated. At
+        most two lengths ever compile per run (the chunk and the final
+        remainder)."""
+        if length not in self._chunks:
+            self._chunks[length] = self._build_chunk(length)
+        return self._chunks[length]
+
+    def _build_chunk(self, length: int):
+        opt = self.optimizer
+        prefetch = self.loop.prefetch
+
+        def chunk(state: TrainState, graph):
+            def body(st: TrainState, _):
+                if prefetch:
+                    def mean_loss(p):
+                        return self._mb_loss_fn(p, st.minibatch,
+                                                st.step).mean()
+                    loss, grads = jax.value_and_grad(mean_loss)(st.params)
+                    # prefetch batch t+1: data-independent of the grads
+                    # above, so XLA may overlap it with the backward pass
+                    next_mb = self._sample_fn(graph, st.step + 1)
+                else:
+                    def mean_loss(p):
+                        return self._loss_fn(p, graph, st.step).mean()
+                    loss, grads = jax.value_and_grad(mean_loss)(st.params)
+                    next_mb = st.minibatch          # None subtree
+                params, opt_state = opt.update(st.params, grads,
+                                               st.opt_state)
+                return TrainState(params, opt_state, st.step + 1,
+                                  next_mb), loss
+
+            return jax.lax.scan(body, state, None, length=length)
+
+        return jax.jit(chunk, donate_argnums=(0,))
+
+    # -- the driver loop -----------------------------------------------------
+
+    def run(self, state: TrainState, graph, *,
+            report: Optional[Callable[[int, float, Optional[float]], None]]
+            = None) -> Tuple[TrainState, RunLog]:
+        """Run from ``state.step`` to ``total_steps`` (or the target
+        accuracy) in scan chunks. ``report(step, last_loss, acc)`` fires
+        once per eval boundary — the SAME eval feeds the target check.
+        Resume-aware: a restored mid-run state continues its schedule."""
+        loop = self.loop
+        log = RunLog()
+        done = int(state.step)
+        # boundaries already behind a resumed state are not re-run
+        eval_mark = done // loop.eval_every if loop.eval_every else 0
+        ckpt_mark = done // loop.ckpt_every if loop.ckpt_every else 0
+        device_losses = []      # per-chunk device arrays; materialized once
+                                # at the end so chunks keep dispatching async
+
+        while done < loop.total_steps and not log.hit_target:
+            n = min(loop.chunk_size, loop.total_steps - done)
+            state, losses = self.compiled_chunk(n)(state, graph)
+            done += n
+            device_losses.append(losses)
+
+            if loop.eval_every and done // loop.eval_every > eval_mark:
+                eval_mark = done // loop.eval_every
+                acc = float(self.eval_fn(state.params, graph))   # ONCE
+                log.evals.append((done, acc))
+                if report is not None:
+                    report(done, float(losses[-1]), acc)
+                if loop.target_acc is not None and acc >= loop.target_acc:
+                    log.hit_target = True
+            if (loop.ckpt_dir and loop.ckpt_every
+                    and done // loop.ckpt_every > ckpt_mark):
+                ckpt_mark = done // loop.ckpt_every
+                self.save(state)
+
+        log.losses = [float(x) for arr in device_losses
+                      for x in np.asarray(arr)]
+        return state, log

@@ -1,0 +1,51 @@
+"""The training-loop state pytree.
+
+``TrainState`` is the ONE carry of the scan-chunked runtime
+(``repro/train/runner.py``): parameters, optimizer state, the step counter
+that seeds the communication-free sampling (``sampling.step_key``), and —
+when §V-A prefetch is on — the mini-batch constructed for the *next* step
+(the prefetch carry folded into the scan state, replacing the per-step
+Python dispatch of the legacy ``PrefetchState`` loop).
+
+It is a registered dataclass, so it round-trips through ``lax.scan``,
+``jax.jit`` donation, and the ``checkpoint/ckpt.py`` flatten-with-paths
+save format unchanged — a full-state checkpoint is just
+``save_checkpoint(dir, step, state)``, and a restored state continues the
+run bit-identically (sampling and dropout keys are pure functions of
+``(seed, step)``).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.minibatch import Minibatch
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class TrainState:
+    """Everything one training step consumes and produces.
+
+    ``step`` is the index of the NEXT step to run (int32 scalar; it feeds
+    ``sampling.step_key`` and the dropout keys, so it must travel with the
+    params for resume to be deterministic). ``minibatch`` is the §V-A
+    prefetch carry — batch ``step``, already constructed — or ``None``
+    when prefetch is off (an empty subtree, so the scan carry structure
+    stays consistent either way).
+    """
+
+    params: Any
+    opt_state: Any
+    step: jax.Array
+    minibatch: Optional[Minibatch] = None
+
+
+def init_train_state(params, opt_state,
+                     minibatch: Optional[Minibatch] = None) -> TrainState:
+    """A fresh state at step 0."""
+    return TrainState(params=params, opt_state=opt_state,
+                      step=jnp.zeros((), jnp.int32), minibatch=minibatch)

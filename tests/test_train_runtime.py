@@ -1,0 +1,213 @@
+"""Tests for the scan-chunked training runtime (``repro.train``) and the
+unified forward engine (``core/forward.py``) — the ISSUE-4 acceptance
+criteria, runnable on one CPU device via the g_d = g = 1 mesh:
+
+* the scan-chunked runner produces the BIT-identical loss sequence to the
+  legacy per-step Python loops (prefetch off AND on);
+* save mid-run -> restore ``TrainState`` -> the resumed loss sequence and
+  final params are bit-identical to an uninterrupted run (the first real
+  exercise of ``load_checkpoint`` on the train path), prefetch on and off;
+* one eval per report boundary feeds BOTH the report and the
+  target-accuracy stop (the legacy double-eval is structurally gone);
+* the §V-C fused elementwise tail (``TrainOptions.fused_elementwise``,
+  routed through the engine's tail hook) agrees with the unfused
+  reference — forward exactly, gradients to float tolerance.
+"""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import fourd, gcn_model as M, pipeline as PL
+from repro.graphs import build_partitioned_graph, make_synthetic_dataset
+from repro.optim import AdamW
+from repro.train import Trainer, TrainLoopConfig, TrainState
+
+STEPS = 6
+
+
+@pytest.fixture(scope="module")
+def setup():
+    ds = make_synthetic_dataset(n=256, num_classes=4, d_in=16,
+                                avg_degree=8, seed=0)
+    pg = build_partitioned_graph(ds, g=1)
+    cfg = M.GCNConfig(d_in=16, d_hidden=32, num_layers=3, num_classes=4,
+                      dropout=0.0)
+    mesh = fourd.make_mesh_4d(1, 1)
+    plan = fourd.build_plan(pg, cfg, mesh, batch=64,
+                            opts=fourd.TrainOptions(dropout=0.2))
+    graph = plan.shard_graph(pg)
+    return pg, cfg, mesh, plan, graph
+
+
+@pytest.fixture()
+def fresh_params(setup):
+    """A params *factory*: chunk buffers are donated, so every run needs its
+    own copy of the initial parameters."""
+    _, cfg, _, plan, _ = setup
+    return lambda: plan.shard_params(
+        M.init_params(jax.random.PRNGKey(1), cfg))
+
+
+def _per_step_losses(plan, graph, params, opt, prefetch: bool):
+    """The legacy per-step Python loops (the bit-identity reference)."""
+    losses = []
+    if prefetch:
+        sample_fn, step_fn = PL.make_prefetched_train_step(plan, opt)
+        state = PL.PrefetchState(params, opt.init(params),
+                                 sample_fn(graph, jnp.asarray(0)))
+        for s in range(STEPS):
+            state, loss = step_fn(state, graph, jnp.asarray(s))
+            losses.append(float(loss))
+    else:
+        ts = fourd.make_train_step(plan, opt)
+        p, o = params, opt.init(params)
+        for s in range(STEPS):
+            p, o, loss = ts(p, o, graph, jnp.asarray(s))
+            losses.append(float(loss))
+    return losses
+
+
+@pytest.mark.parametrize("prefetch", [False, True])
+@pytest.mark.parametrize("chunk", [1, 4])
+def test_scan_chunked_bitmatches_per_step_loop(setup, fresh_params,
+                                               prefetch, chunk):
+    """Acceptance: chunked scan == per-step loop, bit for bit, for chunk
+    sizes that do and don't divide the step count (1, 4 over 6 steps)."""
+    _, _, _, plan, graph = setup
+    opt = AdamW(lr=5e-3)
+    ref = _per_step_losses(plan, graph, fresh_params(), opt, prefetch)
+    tr = Trainer(plan, opt, TrainLoopConfig(
+        total_steps=STEPS, chunk_size=chunk, prefetch=prefetch))
+    state, log = tr.run(tr.init_state(fresh_params(), graph), graph)
+    assert log.losses == ref                     # bit-identical floats
+    assert int(state.step) == STEPS
+
+
+@pytest.mark.parametrize("prefetch", [False, True])
+def test_checkpoint_resume_bitmatches_uninterrupted(setup, fresh_params,
+                                                    tmp_path, prefetch):
+    """Save mid-run, restore into a FRESH Trainer, and continue: the
+    resumed loss tail and the final params must be bit-identical to the
+    uninterrupted run."""
+    _, _, _, plan, graph = setup
+    opt = AdamW(lr=5e-3)
+    loop = TrainLoopConfig(total_steps=STEPS, chunk_size=2,
+                           prefetch=prefetch, ckpt_dir=str(tmp_path),
+                           ckpt_every=4)
+    full_state, full_log = Trainer(plan, opt, loop).run(
+        Trainer(plan, opt, loop).init_state(fresh_params(), graph), graph)
+
+    resumed = Trainer(plan, opt, loop)           # no shared jit caches
+    example = resumed.init_state(fresh_params(), graph)
+    state = resumed.restore(example, step=4)
+    assert isinstance(state, TrainState) and int(state.step) == 4
+    state, log = resumed.run(state, graph)
+
+    assert log.losses == full_log.losses[4:]     # bit-identical tail
+    for a, b in zip(jax.tree.leaves(full_state.params),
+                    jax.tree.leaves(state.params)):
+        assert np.array_equal(np.asarray(a), np.asarray(b))
+    for a, b in zip(jax.tree.leaves(full_state.opt_state),
+                    jax.tree.leaves(state.opt_state)):
+        assert np.array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_restore_none_when_no_checkpoint(setup, fresh_params, tmp_path):
+    _, _, _, plan, graph = setup
+    opt = AdamW(lr=5e-3)
+    tr = Trainer(plan, opt, TrainLoopConfig(
+        total_steps=2, ckpt_dir=str(tmp_path)))
+    assert tr.restore(tr.init_state(fresh_params(), graph)) is None
+
+
+def test_eval_runs_once_per_report_boundary(setup, fresh_params):
+    """The legacy loop evaluated twice per report step (_maybe_report +
+    _reached_target). The runtime evaluates ONCE per boundary and reuses
+    it for the target check."""
+    _, _, _, plan, graph = setup
+    opt = AdamW(lr=5e-3)
+    real_eval = fourd.make_eval_step(plan)
+    calls = []
+
+    def counting_eval(params, g):
+        calls.append(1)
+        return real_eval(params, g)
+
+    tr = Trainer(plan, opt,
+                 TrainLoopConfig(total_steps=STEPS, chunk_size=2,
+                                 eval_every=2, target_acc=2.0),
+                 eval_fn=counting_eval)
+    _, log = tr.run(tr.init_state(fresh_params(), graph), graph)
+    assert len(calls) == STEPS // 2              # one per boundary: 2, 4, 6
+    assert [s for s, _ in log.evals] == [2, 4, 6]
+    assert not log.hit_target
+
+    # an immediately-satisfied target stops after exactly ONE eval
+    calls.clear()
+    tr2 = Trainer(plan, opt,
+                  TrainLoopConfig(total_steps=STEPS, chunk_size=2,
+                                  eval_every=2, target_acc=0.0),
+                  eval_fn=counting_eval)
+    state, log2 = tr2.run(tr2.init_state(fresh_params(), graph), graph)
+    assert len(calls) == 1 and log2.hit_target
+    assert int(state.step) == 2                  # stopped at the boundary
+
+
+@pytest.mark.parametrize("dropout", [0.0, 0.3])
+def test_fused_elementwise_matches_reference(setup, fresh_params, dropout):
+    """Satellite: the §V-C fused Pallas tail (engine tail hook) is no
+    longer a dead flag — and it must not change the math. At g = 1 the
+    fully-fused path (RMSNorm owned by the kernel) is exercised."""
+    pg, cfg, mesh, _, graph = setup
+    plan0 = fourd.build_plan(pg, cfg, mesh, batch=64,
+                             opts=fourd.TrainOptions(dropout=dropout))
+    plan1 = fourd.build_plan(
+        pg, cfg, mesh, batch=64,
+        opts=fourd.TrainOptions(dropout=dropout, fused_elementwise=True))
+    params = fresh_params()
+    for train in (False, True):
+        l0 = np.array(jax.jit(fourd.make_loss_fn(plan0, train=train))(
+            params, graph, jnp.asarray(3)))
+        l1 = np.array(jax.jit(fourd.make_loss_fn(plan1, train=train))(
+            params, graph, jnp.asarray(3)))
+        np.testing.assert_allclose(l1, l0, rtol=1e-6)
+
+    def mean_loss(plan):
+        return lambda p: fourd.make_loss_fn(plan, train=True)(
+            p, graph, jnp.asarray(0)).mean()
+
+    g0 = jax.jit(jax.grad(mean_loss(plan0)))(params)
+    g1 = jax.jit(jax.grad(mean_loss(plan1)))(params)
+    for a, b in zip(jax.tree.leaves(g0), jax.tree.leaves(g1)):
+        np.testing.assert_allclose(np.array(b), np.array(a), atol=1e-6)
+
+
+def test_eval_step_csr_backend_matches_reference_forward(setup,
+                                                         fresh_params):
+    """The engine's "csr" backend (full-graph eval) reproduces the
+    single-device reference model's accuracy on the whole graph."""
+    pg, cfg, mesh, plan, graph = setup
+    params = fresh_params()
+    acc_4d = float(fourd.make_eval_step(plan)(params, graph))
+    dense = jnp.array(csr_to_dense_padded(pg))
+    logits = M.forward(M.init_params(jax.random.PRNGKey(1), cfg), dense,
+                       jnp.array(pg.features), cfg, train=False)
+    acc_ref = float(M.accuracy(logits, jnp.array(pg.labels),
+                               jnp.array(pg.labels >= 0)))
+    assert abs(acc_4d - acc_ref) < 1e-6
+
+
+def csr_to_dense_padded(pg):
+    """Densify the g=1 padded-CSR block (the whole graph) for the oracle."""
+    import numpy as _np
+    rp = _np.asarray(pg.block_rp)[0, 0]
+    ci = _np.asarray(pg.block_ci)[0, 0]
+    val = _np.asarray(pg.block_val)[0, 0]
+    n = pg.n_pad
+    out = _np.zeros((n, n), _np.float32)
+    for r in range(n):
+        for k in range(rp[r], rp[r + 1]):
+            if ci[k] < n:
+                out[r, ci[k]] += val[k]
+    return out
