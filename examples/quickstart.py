@@ -26,13 +26,17 @@ def main():
     cfg = M.GCNConfig(d_in=ds.feature_dim, d_hidden=128, num_layers=3,
                       num_classes=ds.num_classes, dropout=0.2)
     mesh = fourd.make_mesh_4d(1, 1)                  # one device, same code
+    # sample_mode="epoch": without-replacement — each epoch permutes the
+    # vertex set once and every step takes the next slice (communication-
+    # free, a pure function of (seed, epoch, step)); n/batch steps = 1 epoch
     plan = fourd.build_plan(pg, cfg, mesh, batch=256,
-                            opts=fourd.TrainOptions(dropout=0.2))
+                            opts=fourd.TrainOptions(dropout=0.2,
+                                                    sample_mode="epoch"))
 
     graph = plan.shard_graph(pg)
     opt = AdamW(lr=5e-3, weight_decay=1e-4)
     trainer = Trainer(plan, opt, TrainLoopConfig(
-        total_steps=200, chunk_size=8, eval_every=48))
+        epochs=25, chunk_size=8, eval_every=48))
     state = trainer.init_state(
         plan.shard_params(M.init_params(jax.random.PRNGKey(0), cfg)), graph)
 

@@ -1,3 +1,6 @@
-from repro.checkpoint.ckpt import save_checkpoint, load_checkpoint, latest_step
+from repro.checkpoint.ckpt import (checkpoint_keys, checkpoint_path,
+                                   latest_step, load_checkpoint,
+                                   save_checkpoint)
 
-__all__ = ["save_checkpoint", "load_checkpoint", "latest_step"]
+__all__ = ["checkpoint_keys", "checkpoint_path", "latest_step",
+           "load_checkpoint", "save_checkpoint"]

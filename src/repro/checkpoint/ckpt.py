@@ -50,6 +50,19 @@ def save_checkpoint(directory: str, step: int, tree: Any,
     return path
 
 
+def checkpoint_path(directory: str, step: int, name: str = "ckpt") -> str:
+    """The ONE definition of a checkpoint's on-disk location."""
+    return os.path.join(directory, f"{name}_{step:08d}.npz")
+
+
+def checkpoint_keys(directory: str, step: int, name: str = "ckpt") -> list:
+    """The flattened leaf keys stored in a checkpoint — callers inspect the
+    saved *structure* (e.g. whether a §V-A prefetch carry was written)
+    before committing to a restore shape."""
+    with np.load(checkpoint_path(directory, step, name)) as data:
+        return list(data.files)
+
+
 def latest_step(directory: str, name: str = "ckpt") -> Optional[int]:
     if not os.path.isdir(directory):
         return None
@@ -61,8 +74,17 @@ def latest_step(directory: str, name: str = "ckpt") -> Optional[int]:
 
 def load_checkpoint(directory: str, step: int, example_tree: Any,
                     name: str = "ckpt") -> Tuple[Any, int]:
-    """Restore into the structure of ``example_tree`` (shapes validated)."""
-    path = os.path.join(directory, f"{name}_{step:08d}.npz")
+    """Restore into the structure of ``example_tree`` (shapes AND dtypes
+    validated).
+
+    Dtypes are normalized to the example's: a checkpoint written under a
+    different x64/dtype regime would otherwise silently load e.g. an int64
+    ``step`` into the int32 ``(seed, step)`` key derivation and change the
+    sampling stream. Each leaf is cast to the example leaf's dtype and the
+    cast is asserted value-preserving (round-trips exactly) — a lossy
+    restore fails loudly instead of corrupting the run.
+    """
+    path = checkpoint_path(directory, step, name)
     with np.load(path) as data:
         arrays = {k: data[k] for k in data.files}
     flat, treedef = jax.tree_util.tree_flatten_with_path(example_tree)
@@ -71,9 +93,24 @@ def load_checkpoint(directory: str, step: int, example_tree: Any,
         key = _SEP.join(
             str(getattr(q, "key", getattr(q, "idx", q))) for q in p)
         key = key or "_root"
+        if key not in arrays:
+            raise ValueError(
+                f"checkpoint {path} has no leaf '{key}' (saved keys: "
+                f"{sorted(arrays)}): it was written under a different "
+                "state layout — restore into a matching example tree or "
+                "migrate the checkpoint")
         arr = arrays[key]
         if hasattr(leaf, "shape"):
             assert tuple(arr.shape) == tuple(leaf.shape), (
                 f"{key}: checkpoint shape {arr.shape} != {leaf.shape}")
+        want = getattr(leaf, "dtype", None)
+        if want is not None and arr.dtype != want:
+            cast = arr.astype(want)
+            assert np.array_equal(cast.astype(arr.dtype), arr,
+                                  equal_nan=True), (
+                f"{key}: checkpoint dtype {arr.dtype} does not restore "
+                f"losslessly into {np.dtype(want)} — the checkpoint was "
+                "written under a different dtype regime")
+            arr = cast
         leaves.append(arr)
     return jax.tree_util.tree_unflatten(treedef, leaves), step

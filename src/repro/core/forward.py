@@ -58,6 +58,11 @@ class TrainOptions:
     reshard_impl: str = "gather"       # §IV-C4 / §Perf
     dropout: float = 0.0               # dropout inside the distributed model
     seed: int = 0
+    # Sampling schedule: "step" draws an independent per-step sample
+    # (seed, step, dp); "epoch" runs without replacement within an epoch —
+    # one permutation per (seed, epoch, dp), step t takes slice t
+    # (core/sampling.py; still communication-free).
+    sample_mode: str = "step"          # "step" | "epoch"
     # §Perf H3.3 (beyond-paper): dtype of the extracted dense mini-batch
     # adjacency blocks. bf16 halves the dominant memory stream of the 4D
     # step (the B x B blocks) while the SpMM accumulates in f32.

@@ -152,6 +152,7 @@ class MinibatchBuilder:
 
     scfg: smp.SampleConfig
     mode: str = "stratified"          # 'stratified' | 'exact'
+    schedule: str = "step"            # 'step' | 'epoch' (without-replacement)
     fmt: BlockFormat = BlockFormat.DENSE
     impl: str = "jax"                 # 'jax' | 'pallas'
     block_dtype: Any = jnp.float32
@@ -162,7 +163,9 @@ class MinibatchBuilder:
 
     def __post_init__(self):
         assert self.mode in ("exact", "stratified"), self.mode
+        assert self.schedule in ("step", "epoch"), self.schedule
         assert self.impl in ("jax", "pallas"), self.impl
+        self.scfg.validate()
         if self.impl == "pallas":
             assert self.max_row_nnz > 0, (
                 "the fused Pallas extraction needs the static per-row edge "
@@ -174,6 +177,7 @@ class MinibatchBuilder:
         """Build from ``fourd.TrainOptions`` (duck-typed to avoid a cycle)."""
         return cls(
             scfg=scfg, mode="stratified",
+            schedule=getattr(opts, "sample_mode", "step"),
             fmt=BlockFormat.from_spmm_impl(opts.spmm_impl),
             impl=getattr(opts, "extract_impl", "jax"),
             block_dtype=(jnp.bfloat16 if opts.block_dtype == "bf16"
@@ -183,13 +187,47 @@ class MinibatchBuilder:
 
     # -- phase 1: sampling ---------------------------------------------------
 
-    def sample(self, key: jax.Array) -> jax.Array:
-        """(g, b) global vertex ids — sampling-mode dispatch."""
+    @property
+    def steps_per_epoch(self) -> int:
+        return self.scfg.steps_per_epoch
+
+    def epoch_of(self, step: jax.Array) -> jax.Array:
+        """The epoch a global step falls in — epoch boundaries sit at fixed
+        multiples of ``steps_per_epoch``, so the counter is derivable from
+        the step alone (callers that carry an explicit epoch, e.g. the
+        ``TrainState`` runtime, pass it through instead)."""
+        return jnp.asarray(step, jnp.int32) // self.steps_per_epoch
+
+    def sample(self, key: jax.Array,
+               t: jax.Array | None = None) -> jax.Array:
+        """(g, b) global vertex ids — sampling-mode dispatch. ``t`` is the
+        step *within* the epoch (required under the 'epoch' schedule, where
+        ``key`` is the epoch key and the sample is permutation slice ``t``;
+        ignored under 'step', where ``key`` is the per-step key)."""
+        if self.schedule == "epoch":
+            assert t is not None, "the epoch schedule needs the in-epoch step"
+            if self.mode == "exact":
+                s = smp.sample_epoch_exact(key, self.scfg.n_pad,
+                                           self.scfg.batch, t)
+                return s[None]                   # one range at g = 1
+            return smp.sample_epoch_stratified(key, self.scfg, t)
         if self.mode == "exact":
             s = smp.sample_uniform_exact(key, self.scfg.n_pad,
                                          self.scfg.batch)
             return s[None]                       # one range at g = 1
         return smp.sample_stratified(key, self.scfg)
+
+    def sample_ids(self, step: jax.Array, epoch: jax.Array | None,
+                   dp_index: jax.Array | int) -> jax.Array:
+        """Key derivation + schedule dispatch in one place: the (g, b)
+        sample as a pure function of ``(seed, epoch, step, dp_index)`` —
+        identical on every device of a DP group, zero communication."""
+        step = jnp.asarray(step, jnp.int32)
+        if self.schedule == "epoch":
+            epoch = self.epoch_of(step) if epoch is None else epoch
+            t = step - epoch * self.steps_per_epoch
+            return self.sample(smp.epoch_key(self.seed, epoch, dp_index), t)
+        return self.sample(smp.step_key(self.seed, step, dp_index))
 
     def rescale_constants(self) -> Tuple[float, float]:
         """(1/p_same, 1/p_cross): Eq. 23, range-dependent under
@@ -292,16 +330,19 @@ class MinibatchBuilder:
 
     def build_local(self, shards: GraphShards, feats_loc: jax.Array,
                     labels_loc: jax.Array, step: jax.Array,
-                    num_layers: int, *, dp_axis: str = "d") -> Minibatch:
+                    num_layers: int, *, epoch: jax.Array | None = None,
+                    dp_axis: str = "d") -> Minibatch:
         """Alg. 2: communication-free construction of this device's batch.
 
         Every device derives the identical stratified sample from (seed,
-        step, dp_index) and extracts its local adjacency block for each of
-        the three rotation planes, plus its feature/label slices. NO
-        collectives — asserted by tests on the lowered HLO.
+        epoch, step, dp_index) — per-step key under the 'step' schedule,
+        epoch-permutation slice under 'epoch' (``epoch`` defaults to the
+        one the global step falls in) — and extracts its local adjacency
+        block for each of the three rotation planes, plus its feature/label
+        slices. NO collectives — asserted by tests on the lowered HLO.
         """
-        key = smp.step_key(self.seed, step, jax.lax.axis_index(dp_axis))
-        s2d = self.sample(key)                       # (g, b) global ids
+        s2d = self.sample_ids(step, epoch,
+                              jax.lax.axis_index(dp_axis))  # (g, b) ids
         inv_same, inv_cross = self.rescale_constants()
         blocks = self.extract_plane_blocks(
             shards, s2d, num_layers,

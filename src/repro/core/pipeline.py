@@ -75,8 +75,12 @@ def make_pipeline_fns(plan: FourDPlan):
     per-step ``make_prefetched_train_step`` and the scan-chunked runtime
     (``repro.train``), which folds the prefetch carry into its scan state:
 
-    * ``sample_fn(graph, step) -> Minibatch`` — materialize batch ``step``
-      (the sharded sampling shard_map; warm-up and in-step prefetch).
+    * ``sample_fn(graph, step, epoch=None) -> Minibatch`` — materialize
+      batch ``step`` (the sharded sampling shard_map; warm-up and in-step
+      prefetch). ``epoch`` defaults to the epoch the step falls in, so the
+      §V-A carry survives epoch boundaries inside the scan: prefetching
+      batch ``t+1`` from the last step of an epoch derives the NEXT epoch's
+      permutation — the paper's carry-across-epochs behavior.
     * ``loss_fn(params, minibatch, step) -> (G_d,)`` — consume a carried
       batch through the ONE ``ForwardEngine`` (``core/forward.py``).
     """
@@ -86,20 +90,25 @@ def make_pipeline_fns(plan: FourDPlan):
     mb_specs = _minibatch_specs(plan)
     engine = plan.engine()
 
-    def local_sample(shards: GraphShards, feats, labels, step) -> Minibatch:
+    def local_sample(shards: GraphShards, feats, labels, step,
+                     epoch) -> Minibatch:
         mb = builder.build_local(shards.squeeze_blocks(), feats, labels,
-                                 step, cfg.num_layers)
+                                 step, cfg.num_layers, epoch=epoch)
         # re-add leading dims so out_specs can scatter them on the mesh
         return mb.add_leading()
 
     sample_sharded = shard_map(
         local_sample, mesh=mesh,
-        in_specs=(plan.shards_specs, ds["features"], plan.label_sp, P()),
+        in_specs=(plan.shards_specs, ds["features"], plan.label_sp, P(),
+                  P()),
         out_specs=mb_specs, check_vma=False)
 
-    def sample_fn(graph, step) -> Minibatch:
+    def sample_fn(graph, step, epoch=None) -> Minibatch:
+        if epoch is None:
+            epoch = builder.epoch_of(step)
         return sample_sharded(GraphShards.from_graph(graph),
-                              graph["features"], graph["labels"], step)
+                              graph["features"], graph["labels"], step,
+                              epoch)
 
     def local_loss(params, mb: Minibatch, step):
         mb = mb.strip_leading()

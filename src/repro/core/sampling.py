@@ -21,6 +21,23 @@ Two sampling modes (DESIGN.md §3/§5):
                    ``p_cross = b/n_loc`` across ranges.  At g = 1 this is
                    exactly the paper's scheme.
 
+Two *schedules* stack on top of either mode (the epoch extension of Eq. 20):
+
+* per-step    — every step draws an independent sample from ``(seed, step,
+                dp_index)`` (with replacement *across* steps); the original
+                scheme above.
+* per-epoch   — without-replacement within an epoch: ONE permutation key is
+                derived from ``(seed, epoch, dp_index)`` and step ``t`` of
+                the epoch takes slice ``t`` of that permutation
+                (``sample_epoch_exact``; the stratified variant permutes
+                each vertex range independently). The sample stays a pure
+                function of ``(seed, epoch, step, dp_index)`` — still zero
+                communication, where matrix-based samplers (Tripathy et
+                al. 2023) pay collectives for the same schedule. At ``t = 0``
+                a slice IS ``sort(perm[:B])``, i.e. the per-step scheme under
+                the epoch key, and at ``batch | n`` every vertex appears
+                exactly once per epoch.
+
 Subgraph extraction follows Alg. 2's four phases literally — binary-search
 range location is replaced by *construction* (stratified samples are born
 range-local), phase 2 is the prefix-sum vectorized CSR row extraction, phase
@@ -52,6 +69,26 @@ class SampleConfig(NamedTuple):
     def b_local(self) -> int:
         return self.batch // self.g
 
+    @property
+    def steps_per_epoch(self) -> int:
+        """Full without-replacement slices one epoch permutation yields
+        (``batch | n_pad`` covers every vertex exactly once per epoch; a
+        remainder < batch is dropped, the standard epoch convention)."""
+        return self.n_pad // self.batch
+
+    def validate(self) -> "SampleConfig":
+        """The batch must fit the (padded) vertex set — ``perm[:batch]``
+        with ``batch > n`` silently returns fewer vertices and corrupts the
+        Eq. 23 rescale downstream. Checked at plan/builder build time."""
+        assert self.batch <= self.n_pad, (
+            f"batch={self.batch} exceeds the vertex count n_pad="
+            f"{self.n_pad}: sampling would silently return fewer than "
+            "batch vertices and bias the Eq. 23 rescale")
+        assert self.b_local <= self.n_local, (
+            f"per-range batch {self.b_local} exceeds the range size "
+            f"{self.n_local}")
+        return self
+
 
 # ---------------------------------------------------------------------------
 # Vertex sampling (Eq. 20)
@@ -72,8 +109,52 @@ def step_key(seed: int | jax.Array, step: jax.Array,
 
 def sample_uniform_exact(key: jax.Array, n: int, batch: int) -> jax.Array:
     """Paper Eq. 20: B distinct vertices uniformly, sorted ascending."""
+    assert batch <= n, (
+        f"batch={batch} > n={n}: perm[:batch] would silently return only "
+        f"{n} vertices and corrupt the Eq. 23 rescale")
     perm = jax.random.permutation(key, n)
     return jnp.sort(perm[:batch])
+
+
+def epoch_key(seed: int | jax.Array, epoch: jax.Array,
+              dp_index: jax.Array | int = 0) -> jax.Array:
+    """The shared per-EPOCH PRNG key: fold (epoch, dp_group) into the base
+    seed. One key -> one epoch permutation -> every step of the epoch takes
+    its slice, so the schedule is a pure function of ``(seed, epoch, step,
+    dp_index)`` and stays communication-free (mirrors ``step_key``)."""
+    key = jax.random.PRNGKey(seed) if isinstance(seed, int) else seed
+    key = jax.random.fold_in(key, epoch)
+    return jax.random.fold_in(key, dp_index)
+
+
+def sample_epoch_exact(key: jax.Array, n: int, batch: int,
+                       t: jax.Array) -> jax.Array:
+    """Without-replacement epoch schedule, exact mode: step ``t`` of the
+    epoch is slice ``t`` of the one permutation drawn from the epoch key,
+    sorted ascending. ``t`` may be traced (the in-scan step counter); slice
+    ``0`` equals ``sample_uniform_exact(key, n, batch)`` bit for bit."""
+    assert batch <= n, f"batch={batch} > n={n}"
+    perm = jax.random.permutation(key, n)
+    start = jnp.asarray(t, jnp.int32) * batch
+    return jnp.sort(jax.lax.dynamic_slice(perm, (start,), (batch,)))
+
+
+def sample_epoch_stratified(key: jax.Array, cfg: SampleConfig,
+                            t: jax.Array) -> jax.Array:
+    """Without-replacement epoch schedule, stratified mode: one permutation
+    per vertex range (epoch key split per range), step ``t`` takes slice
+    ``t`` of each. Returns (g, b) global ids, sorted within each range —
+    the same shape/contract as ``sample_stratified``."""
+    n_loc, b = cfg.n_local, cfg.b_local
+    keys = jax.random.split(key, cfg.g)
+    start = jnp.asarray(t, jnp.int32) * b
+
+    def per_range(i, k):
+        perm = jax.random.permutation(k, n_loc)
+        return jnp.sort(jax.lax.dynamic_slice(perm, (start,), (b,))) \
+            + i * n_loc
+
+    return jax.vmap(per_range)(jnp.arange(cfg.g), keys)
 
 
 def sample_stratified(key: jax.Array, cfg: SampleConfig) -> jax.Array:

@@ -4,10 +4,14 @@ the ``repro.train`` runtime.
 Runs ScaleGNN 4D training on a synthetic stand-in dataset on the local
 device set (use XLA_FLAGS=--xla_force_host_platform_device_count=N to get
 a multi-device host mesh). The loop itself is ``train.Trainer``:
-scan-chunked steps (``--chunk-size``), §V-A prefetch folded into the scan
-carry (``--prefetch``), one eval per report boundary, and full-state
-checkpointing (``--ckpt-dir``/``--ckpt-every``) with ``--resume`` picking
-up bit-identically from the latest saved ``TrainState``. Example::
+scan-chunked steps (``--chunk-size``), multi-epoch schedules
+(``--epochs`` with ``--sample-mode epoch`` = without-replacement epoch
+permutations, communication-free), §V-A prefetch folded into the scan
+carry (``--prefetch``, epoch-boundary-crossing), one eval per report
+boundary, and full-state checkpointing (``--ckpt-dir``/``--ckpt-every``,
+async double-buffered writes unless ``--sync-ckpt``) with ``--resume``
+picking up bit-identically from the latest saved ``TrainState`` — the
+final state is always persisted by ``run()`` itself. Example::
 
     XLA_FLAGS=--xla_force_host_platform_device_count=16 \\
     PYTHONPATH=src python -m repro.launch.train \\
@@ -36,7 +40,18 @@ def build_argparser() -> argparse.ArgumentParser:
     ap.add_argument("--batch", type=int, default=1024)
     ap.add_argument("--d-hidden", type=int, default=128)
     ap.add_argument("--layers", type=int, default=3)
-    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--steps", type=int, default=None,
+                    help="optimizer steps to run (default 300; mutually "
+                         "exclusive with --epochs)")
+    ap.add_argument("--epochs", type=int, default=None,
+                    help="run whole epochs of n_pad/batch steps instead of "
+                         "--steps (the two are mutually exclusive)")
+    ap.add_argument("--sample-mode", default="step",
+                    choices=["step", "epoch"],
+                    help="'step': independent per-step samples (seed, step, "
+                         "dp); 'epoch': without-replacement — one "
+                         "permutation per (seed, epoch, dp), step t takes "
+                         "slice t (still communication-free)")
     ap.add_argument("--lr", type=float, default=5e-3)
     ap.add_argument("--dropout", type=float, default=0.2)
     ap.add_argument("--bf16-collectives", action="store_true")
@@ -53,6 +68,9 @@ def build_argparser() -> argparse.ArgumentParser:
     ap.add_argument("--ckpt-every", type=int, default=0,
                     help="steps between full-state checkpoints (0 = only "
                          "the final state)")
+    ap.add_argument("--sync-ckpt", action="store_true",
+                    help="block on mid-run checkpoint writes instead of "
+                         "overlapping them with the next scan chunk")
     ap.add_argument("--resume", action="store_true",
                     help="continue from the latest TrainState in --ckpt-dir")
     ap.add_argument("--seed", type=int, default=0)
@@ -61,6 +79,10 @@ def build_argparser() -> argparse.ArgumentParser:
 
 def main(argv=None):
     args = build_argparser().parse_args(argv)
+    if args.steps is not None and args.epochs is not None:
+        raise SystemExit("--steps and --epochs are mutually exclusive")
+    if args.epochs is None and args.steps is None:
+        args.steps = 300
 
     n_need = args.gd * args.g ** 3
     assert len(jax.devices()) >= n_need, (
@@ -78,17 +100,21 @@ def main(argv=None):
     opts = fourd.TrainOptions(
         bf16_collectives=args.bf16_collectives,
         fused_elementwise=args.fused_elementwise,
-        reshard_impl=args.reshard, dropout=args.dropout, seed=args.seed)
+        reshard_impl=args.reshard, dropout=args.dropout, seed=args.seed,
+        sample_mode=args.sample_mode)
     plan = fourd.build_plan(pg, cfg, mesh, batch=args.batch, opts=opts)
 
     graph = plan.shard_graph(pg)
-    opt = AdamW(lr=linear_warmup_cosine(args.lr, 20, args.steps),
+    total_steps = (args.steps if args.epochs is None
+                   else args.epochs * plan.scfg.steps_per_epoch)
+    opt = AdamW(lr=linear_warmup_cosine(args.lr, 20, total_steps),
                 weight_decay=1e-4, grad_clip=1.0)
     loop = TrainLoopConfig(
-        total_steps=args.steps, chunk_size=args.chunk_size,
+        total_steps=None if args.epochs is not None else args.steps,
+        epochs=args.epochs, chunk_size=args.chunk_size,
         prefetch=args.prefetch, eval_every=args.eval_every,
         target_acc=args.target_acc, ckpt_dir=args.ckpt_dir,
-        ckpt_every=args.ckpt_every)
+        ckpt_every=args.ckpt_every, async_ckpt=not args.sync_ckpt)
     trainer = Trainer(plan, opt, loop)
 
     state = trainer.init_state(
@@ -99,15 +125,18 @@ def main(argv=None):
         # continue — fail loudly instead
         if not args.ckpt_dir:
             raise SystemExit("--resume requires --ckpt-dir")
-        restored = trainer.restore(state)
+        restored = trainer.restore(state, graph=graph)
         if restored is None:
             raise SystemExit(
                 f"--resume: no TrainState checkpoint in {args.ckpt_dir}")
         state = restored
-        print(f"resumed: step {int(state.step)}")
+        print(f"resumed: step {int(state.step)} epoch {int(state.epoch)}")
 
     print(f"ScaleGNN 4D: mesh {dict(mesh.shape)}  dataset {ds.name} "
           f"N={pg.n} E={ds.num_edges} batch={args.batch} "
+          f"sample-mode={args.sample_mode} "
+          f"steps={total_steps} (epochs={args.epochs}, "
+          f"{plan.scfg.steps_per_epoch}/epoch) "
           f"prefetch={args.prefetch} chunk={args.chunk_size}")
 
     t0 = time.time()
@@ -125,16 +154,11 @@ def main(argv=None):
     else:
         acc = float(trainer.eval_fn(state.params, graph))
     dt = time.time() - t0
-    print(f"done: steps<= {args.steps}  time {dt:.1f}s  "
+    print(f"done: steps<= {total_steps}  time {dt:.1f}s  "
           f"full-graph accuracy {acc:.4f}")
-    if args.ckpt_dir:
-        # run() already saved this exact state when the last step landed on
-        # a --ckpt-every boundary; don't fetch and write it twice
-        if args.ckpt_every and int(state.step) % args.ckpt_every == 0:
-            print(f"checkpoint: step {int(state.step)} (saved at boundary)")
-        else:
-            path = trainer.save(state)
-            print("checkpoint:", path)
+    if log.final_ckpt:
+        # run() persists the final state itself (boundary-saved or not)
+        print("checkpoint:", log.final_ckpt)
 
 
 if __name__ == "__main__":

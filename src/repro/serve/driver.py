@@ -83,19 +83,36 @@ class ServingDriver:
             self._service_locked(time.monotonic())
 
     def drain(self) -> None:
-        """Flush everything queued and resolve every completed future."""
+        """Flush everything queued and resolve every completed future.
+
+        An engine failure mid-drain is routed to every in-flight future
+        BEFORE propagating to the caller — otherwise the waiters would hang
+        on futures nobody will ever resolve (their flusher just died)."""
         with self._lock:
-            self._eng.drain()
+            try:
+                self._eng.drain()
+            except Exception as exc:
+                self.last_error = exc
+                self._fail_all_locked(exc)
+                raise
             self._collect_locked()
 
     def close(self) -> None:
-        """Drain outstanding work and stop the pump thread."""
+        """Drain outstanding work and stop the pump thread. Never raises:
+        a failure of the final drain resolves every in-flight future with
+        the exception (via ``drain``) and is recorded in ``last_error`` —
+        ``close()`` runs in ``__exit__``/cleanup paths where raising would
+        mask the original error and strand concurrent ``fut.result()``
+        waiters."""
         self._stop.set()
         self._wake.set()
         if self._thread is not None:
             self._thread.join(timeout=5)
             self._thread = None
-        self.drain()
+        try:
+            self.drain()
+        except Exception:
+            pass          # routed to the futures + last_error by drain()
 
     def __enter__(self) -> "ServingDriver":
         return self

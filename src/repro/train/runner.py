@@ -14,6 +14,13 @@ run could resume.
   paid once per chunk (measured by the fig6 scan-chunk ablation). The
   §V-A prefetch carry (the next step's ``Minibatch``) is part of the scan
   state, so sampling overlap needs no per-step Python either.
+* **multi-epoch schedules** — ``TrainLoopConfig.epochs`` runs whole
+  epochs of ``plan.scfg.steps_per_epoch`` steps; the ``TrainState`` epoch
+  counter advances *inside* the scan body, so under the
+  without-replacement sampling schedule (``TrainOptions.sample_mode =
+  "epoch"``) the §V-A prefetch carry crosses epoch boundaries inside one
+  scan dispatch — the paper's carry-across-epochs behavior, with the
+  sample still a pure function of ``(seed, epoch, step, dp_index)``.
 * **buffer donation** — the ``TrainState`` argument is donated to the
   chunk, so params/optimizer/minibatch buffers are updated in place
   instead of doubling peak memory.
@@ -21,10 +28,20 @@ run could resume.
   BOTH the report and the target-accuracy stop (the legacy loop's
   double-eval bug is structurally gone).
 * **full-state checkpoint/resume** — ``save()`` writes the whole
-  ``TrainState`` (params, opt state, step, prefetch carry) through the
-  existing ``checkpoint/ckpt.py`` API; ``restore()`` + ``run()`` continue
-  bit-identically, because sampling and dropout keys are pure functions of
-  ``(seed, step)`` and the step counter travels in the state.
+  ``TrainState`` (params, opt state, step, epoch, prefetch carry) through
+  the existing ``checkpoint/ckpt.py`` API; ``restore()`` + ``run()``
+  continue bit-identically, because sampling and dropout keys are pure
+  functions of ``(seed, epoch, step)`` and both counters travel in the
+  state. ``run()`` always persists the final state when a checkpoint
+  directory is configured (target-accuracy stops and off-boundary step
+  counts included — callers no longer re-derive boundary arithmetic).
+* **async checkpointing** — mid-run saves are double-buffered: the driver
+  thread snapshots the state into fresh device buffers (an async-dispatched
+  on-device copy, so the next chunk's donation cannot invalidate it) and a
+  worker thread performs the blocking ``device_get`` + ``.npz`` write,
+  overlapping with the next scan chunk. At most one save is in flight —
+  the next save (or ``run()``'s exit) joins the previous one first. The
+  on-disk file is byte-identical to a synchronous ``save()``.
 
 The loss math is the unchanged 4D path: the non-prefetch body consumes
 ``fourd.make_loss_fn`` (sampling inside the step), the prefetch body the
@@ -34,36 +51,53 @@ The loss math is the unchanged 4D path: the non-prefetch body consumes
 from __future__ import annotations
 
 import dataclasses
+import threading
 from typing import Callable, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.checkpoint import latest_step, load_checkpoint, save_checkpoint
+from repro.checkpoint import (checkpoint_keys, checkpoint_path, latest_step,
+                              load_checkpoint, save_checkpoint)
 from repro.core import fourd
 from repro.core import pipeline as PL
 from repro.train.state import TrainState, init_train_state
 
 CKPT_NAME = "state"          # full-TrainState checkpoints (vs bare "ckpt")
 
+# indirection for tests: assert the driver thread never blocks on a host
+# transfer between chunks (the async-checkpoint acceptance criterion)
+_device_get = jax.device_get
+
 
 @dataclasses.dataclass(frozen=True)
 class TrainLoopConfig:
-    """Host-side knobs of the runtime (all static)."""
+    """Host-side knobs of the runtime (all static). Give the run length as
+    ``total_steps`` OR as whole ``epochs`` (of ``plan.scfg.steps_per_epoch``
+    optimizer steps each) — exactly one of the two."""
 
-    total_steps: int
+    total_steps: Optional[int] = None
     chunk_size: int = 8        # optimizer steps per lax.scan dispatch
     prefetch: bool = False     # §V-A: fold the sampling carry into the scan
     eval_every: int = 0        # steps between evals (0 = never), rounded
                                # up to the enclosing chunk boundary
     target_acc: Optional[float] = None   # stop once an eval reaches this
     ckpt_dir: Optional[str] = None
-    ckpt_every: int = 0        # steps between full-state saves (0 = never),
-                               # rounded up to the enclosing chunk boundary
+    ckpt_every: int = 0        # steps between full-state saves (0 = only
+                               # the final state), rounded up to the
+                               # enclosing chunk boundary
+    epochs: Optional[int] = None         # alternative to total_steps
+    async_ckpt: bool = True    # overlap mid-run saves with the next chunk
 
     def __post_init__(self):
-        assert self.total_steps >= 0 and self.chunk_size > 0
+        assert (self.total_steps is None) != (self.epochs is None), (
+            "give exactly one of total_steps / epochs")
+        if self.total_steps is not None:
+            assert self.total_steps >= 0
+        else:
+            assert self.epochs >= 0
+        assert self.chunk_size > 0
         assert self.target_acc is None or self.eval_every > 0, (
             "target_acc is only checked at eval boundaries; set eval_every")
 
@@ -72,11 +106,13 @@ class TrainLoopConfig:
 class RunLog:
     """What ``Trainer.run`` observed: the per-step loss sequence (in step
     order, one entry per optimizer step run), the (step, accuracy) evals,
-    and whether the target accuracy stopped the run early."""
+    whether the target accuracy stopped the run early, and the final-state
+    checkpoint path (None when no ckpt_dir is configured)."""
 
     losses: List[float] = dataclasses.field(default_factory=list)
     evals: List[Tuple[int, float]] = dataclasses.field(default_factory=list)
     hit_target: bool = False
+    final_ckpt: Optional[str] = None
 
 
 class Trainer:
@@ -93,6 +129,9 @@ class Trainer:
         self.plan = plan
         self.optimizer = optimizer
         self.loop = loop
+        self.steps_per_epoch = plan.scfg.steps_per_epoch
+        self.total_steps = (loop.total_steps if loop.total_steps is not None
+                            else loop.epochs * self.steps_per_epoch)
         if loop.prefetch:
             self._sample_fn, self._mb_loss_fn = PL.make_pipeline_fns(plan)
         else:
@@ -100,6 +139,12 @@ class Trainer:
         self.eval_fn = eval_fn if eval_fn is not None \
             else fourd.make_eval_step(plan)
         self._chunks = {}          # scan length -> jitted chunk fn
+        # double-buffered async save: fresh device buffers per snapshot, so
+        # the next chunk's donation cannot invalidate an in-flight fetch
+        self._snapshot = jax.jit(
+            lambda s: jax.tree.map(lambda x: x.copy(), s))
+        self._save_thread: Optional[threading.Thread] = None
+        self._save_exc: Optional[BaseException] = None
 
     # -- state construction --------------------------------------------------
 
@@ -109,28 +154,110 @@ class Trainer:
               if self.loop.prefetch else None)
         return init_train_state(params, self.optimizer.init(params), mb)
 
-    def save(self, state: TrainState, directory: Optional[str] = None) -> str:
-        """Write the FULL state (params, opt state, step, prefetch carry)
-        atomically; the filename carries the step."""
+    def save(self, state: TrainState, directory: Optional[str] = None,
+             *, sync: bool = True,
+             step: Optional[int] = None) -> Optional[str]:
+        """Write the FULL state (params, opt state, step, epoch, prefetch
+        carry) atomically; the filename carries the step.
+
+        ``sync=True`` (the public default) blocks until the file is on
+        disk and returns its path. ``sync=False`` is the double-buffered
+        path ``run()`` uses between chunks: the state is snapshotted into
+        fresh device buffers (async dispatch — no host transfer on the
+        calling thread) and a worker thread performs the ``device_get`` +
+        write, overlapping with the next scan chunk; returns None. Either
+        way the previous in-flight save is joined first, so at most one is
+        outstanding and files land in step order, byte-identical to the
+        synchronous path."""
         directory = directory or self.loop.ckpt_dir
         assert directory, "no checkpoint directory configured"
-        return save_checkpoint(directory, int(state.step),
-                               jax.device_get(state), name=CKPT_NAME)
+        self.join_saves()
+        # run() passes the host-side step counter so the async path never
+        # waits on the device between chunks, not even for a scalar
+        step = int(state.step) if step is None else step
+        if sync:
+            return save_checkpoint(directory, step, _device_get(state),
+                                   name=CKPT_NAME)
+        snap = self._snapshot(state)
+
+        def work():
+            try:
+                save_checkpoint(directory, step, _device_get(snap),
+                                name=CKPT_NAME)
+            except BaseException as exc:       # surfaced at the next join
+                self._save_exc = exc
+
+        self._save_thread = threading.Thread(
+            target=work, name="trainer-async-ckpt", daemon=True)
+        self._save_thread.start()
+        return None
+
+    def join_saves(self) -> None:
+        """Wait for the in-flight async save (if any); re-raise its error."""
+        if self._save_thread is not None:
+            self._save_thread.join()
+            self._save_thread = None
+        if self._save_exc is not None:
+            exc, self._save_exc = self._save_exc, None
+            raise exc
 
     def restore(self, example_state: TrainState,
                 directory: Optional[str] = None,
-                step: Optional[int] = None) -> Optional[TrainState]:
+                step: Optional[int] = None, *,
+                graph=None) -> Optional[TrainState]:
         """Latest (or given-step) full-state checkpoint, restored into the
         structure/shapes of ``example_state``; None when there is none.
-        The FIRST exercise of ``load_checkpoint`` on the train path."""
+
+        Prefetch-flag mismatches are handled explicitly instead of leaking
+        a raw ``KeyError`` from the npz path lookup:
+
+        * resuming WITH prefetch from a checkpoint written WITHOUT it —
+          the saved state has no carry; when ``graph`` is given the warm-up
+          batch is rebuilt from the restored (step, epoch) (bit-identical,
+          since the carry is a pure function of them), otherwise this
+          raises with instructions.
+        * resuming WITHOUT prefetch from a checkpoint written WITH it —
+          the saved carry is redundant (same pure-function argument) and is
+          dropped deliberately.
+        """
         directory = directory or self.loop.ckpt_dir
         assert directory, "no checkpoint directory configured"
         if step is None:
             step = latest_step(directory, name=CKPT_NAME)
             if step is None:
                 return None
-        state, _ = load_checkpoint(directory, step, example_state,
+        ckpt_keys = checkpoint_keys(directory, step, name=CKPT_NAME)
+        # dataclass fields flatten as GetAttrKey -> a ".minibatch" prefix
+        ckpt_has_carry = any(k.split("::")[0].lstrip(".") == "minibatch"
+                             for k in ckpt_keys)
+        # pre-epoch-counter checkpoints (PR-4 layout) lack the ".epoch"
+        # leaf; it is derivable from the step (boundaries sit at fixed
+        # multiples of steps_per_epoch), so backfill instead of failing
+        backfill_epoch = ".epoch" not in ckpt_keys
+        example = example_state
+        if backfill_epoch:
+            example = dataclasses.replace(example, epoch=None)
+        rebuild_carry = False
+        if self.loop.prefetch and not ckpt_has_carry:
+            if graph is None:
+                raise ValueError(
+                    f"checkpoint step {step} in {directory} was written "
+                    "without the §V-A prefetch carry but this Trainer has "
+                    "prefetch=True. Pass graph=... to restore() so the "
+                    "warm-up batch can be rebuilt (bit-identical — the "
+                    "carry is a pure function of (seed, epoch, step)), or "
+                    "resume with prefetch off.")
+            example = dataclasses.replace(example, minibatch=None)
+            rebuild_carry = True
+        state, _ = load_checkpoint(directory, step, example,
                                    name=CKPT_NAME)
+        if backfill_epoch:
+            state = dataclasses.replace(
+                state, epoch=jnp.asarray(state.step, jnp.int32)
+                // self.steps_per_epoch)
+        if rebuild_carry:
+            mb = self._sample_fn(graph, state.step, state.epoch)
+            state = dataclasses.replace(state, minibatch=mb)
         return state
 
     # -- the scan-chunked step -----------------------------------------------
@@ -147,6 +274,7 @@ class Trainer:
     def _build_chunk(self, length: int):
         opt = self.optimizer
         prefetch = self.loop.prefetch
+        spe = self.steps_per_epoch
 
         def chunk(state: TrainState, graph):
             def body(st: TrainState, _):
@@ -156,17 +284,22 @@ class Trainer:
                                                 st.step).mean()
                     loss, grads = jax.value_and_grad(mean_loss)(st.params)
                     # prefetch batch t+1: data-independent of the grads
-                    # above, so XLA may overlap it with the backward pass
-                    next_mb = self._sample_fn(graph, st.step + 1)
+                    # above, so XLA may overlap it with the backward pass.
+                    # The epoch of step t+1 is derived here, INSIDE the
+                    # scan, so the carry crosses epoch boundaries without
+                    # leaving the chunk (paper §V-A).
+                    next_mb = self._sample_fn(graph, st.step + 1,
+                                              (st.step + 1) // spe)
                 else:
                     def mean_loss(p):
-                        return self._loss_fn(p, graph, st.step).mean()
+                        return self._loss_fn(p, graph, st.step,
+                                             st.epoch).mean()
                     loss, grads = jax.value_and_grad(mean_loss)(st.params)
                     next_mb = st.minibatch          # None subtree
                 params, opt_state = opt.update(st.params, grads,
                                                st.opt_state)
                 return TrainState(params, opt_state, st.step + 1,
-                                  next_mb), loss
+                                  next_mb, (st.step + 1) // spe), loss
 
             return jax.lax.scan(body, state, None, length=length)
 
@@ -177,21 +310,26 @@ class Trainer:
     def run(self, state: TrainState, graph, *,
             report: Optional[Callable[[int, float, Optional[float]], None]]
             = None) -> Tuple[TrainState, RunLog]:
-        """Run from ``state.step`` to ``total_steps`` (or the target
+        """Run from ``state.step`` to the configured length (or the target
         accuracy) in scan chunks. ``report(step, last_loss, acc)`` fires
         once per eval boundary — the SAME eval feeds the target check.
-        Resume-aware: a restored mid-run state continues its schedule."""
+        Resume-aware: a restored mid-run state continues its schedule.
+        When ``ckpt_dir`` is set the FINAL state is always persisted —
+        target-accuracy stops and step counts off the ``ckpt_every``
+        boundary included."""
         loop = self.loop
+        total = self.total_steps
         log = RunLog()
         done = int(state.step)
         # boundaries already behind a resumed state are not re-run
         eval_mark = done // loop.eval_every if loop.eval_every else 0
         ckpt_mark = done // loop.ckpt_every if loop.ckpt_every else 0
+        saved_at = None         # step of the newest (possibly async) save
         device_losses = []      # per-chunk device arrays; materialized once
                                 # at the end so chunks keep dispatching async
 
-        while done < loop.total_steps and not log.hit_target:
-            n = min(loop.chunk_size, loop.total_steps - done)
+        while done < total and not log.hit_target:
+            n = min(loop.chunk_size, total - done)
             state, losses = self.compiled_chunk(n)(state, graph)
             done += n
             device_losses.append(losses)
@@ -207,7 +345,20 @@ class Trainer:
             if (loop.ckpt_dir and loop.ckpt_every
                     and done // loop.ckpt_every > ckpt_mark):
                 ckpt_mark = done // loop.ckpt_every
-                self.save(state)
+                self.save(state, sync=not loop.async_ckpt, step=done)
+                saved_at = done
+
+        if loop.ckpt_dir:
+            if saved_at == done:
+                # the boundary save above already covers the final state;
+                # just wait for it and report its path
+                self.join_saves()
+                log.final_ckpt = checkpoint_path(
+                    loop.ckpt_dir, done, name=CKPT_NAME)
+            else:
+                log.final_ckpt = self.save(state)       # sync: run() exit
+        else:
+            self.join_saves()                           # surface any error
 
         log.losses = [float(x) for arr in device_losses
                       for x in np.asarray(arr)]

@@ -32,20 +32,25 @@ class TrainState:
 
     ``step`` is the index of the NEXT step to run (int32 scalar; it feeds
     ``sampling.step_key`` and the dropout keys, so it must travel with the
-    params for resume to be deterministic). ``minibatch`` is the §V-A
-    prefetch carry — batch ``step``, already constructed — or ``None``
-    when prefetch is off (an empty subtree, so the scan carry structure
-    stays consistent either way).
+    params for resume to be deterministic). ``epoch`` is the epoch that
+    step falls in (int32 scalar) — under the without-replacement schedule
+    it seeds the per-epoch permutation (``sampling.epoch_key``), so it
+    travels with the step for mid-epoch resume to be bit-identical.
+    ``minibatch`` is the §V-A prefetch carry — batch ``step``, already
+    constructed — or ``None`` when prefetch is off (an empty subtree, so
+    the scan carry structure stays consistent either way).
     """
 
     params: Any
     opt_state: Any
     step: jax.Array
     minibatch: Optional[Minibatch] = None
+    epoch: Optional[jax.Array] = None
 
 
 def init_train_state(params, opt_state,
                      minibatch: Optional[Minibatch] = None) -> TrainState:
-    """A fresh state at step 0."""
+    """A fresh state at step 0, epoch 0."""
     return TrainState(params=params, opt_state=opt_state,
-                      step=jnp.zeros((), jnp.int32), minibatch=minibatch)
+                      step=jnp.zeros((), jnp.int32), minibatch=minibatch,
+                      epoch=jnp.zeros((), jnp.int32))

@@ -1,0 +1,59 @@
+"""Tests for ``checkpoint/ckpt.py``: the dtype-regime satellite (restore
+must assert-and-cast every leaf to the example's dtype — an int64 ``step``
+from an x64 writer would otherwise silently change the ``(seed, step)``
+sampling stream) plus the structure-inspection helpers the runtime's
+prefetch-mismatch detection relies on."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.checkpoint import (checkpoint_keys, checkpoint_path, latest_step,
+                              load_checkpoint, save_checkpoint)
+from repro.core import sampling as S
+
+
+def test_load_casts_lossless_dtype_mismatch(tmp_path):
+    """An int64-regime checkpoint restores into an int32 example with the
+    VALUES intact and the example's dtypes — so the (seed, step) key
+    derivation (and with it the sampling stream) is unchanged."""
+    d = str(tmp_path)
+    save_checkpoint(d, 0, {"step": np.int64(7),
+                           "w": np.ones((3,), np.float64)})
+    example = {"step": np.zeros((), np.int32),
+               "w": np.zeros((3,), np.float32)}
+    got, _ = load_checkpoint(d, 0, example)
+    assert got["step"].dtype == np.int32 and int(got["step"]) == 7
+    assert got["w"].dtype == np.float32
+
+    k_restored = S.step_key(0, jnp.asarray(got["step"]))
+    k_native = S.step_key(0, jnp.asarray(7, jnp.int32))
+    assert np.array_equal(np.array(k_restored), np.array(k_native))
+
+
+def test_load_rejects_lossy_dtype_mismatch(tmp_path):
+    d = str(tmp_path)
+    save_checkpoint(d, 0, {"x": np.float64(1.0000000001)})   # not f32-exact
+    with pytest.raises(AssertionError, match="dtype"):
+        load_checkpoint(d, 0, {"x": np.zeros((), np.float32)})
+    # an int that overflows the narrower type is lossy too
+    save_checkpoint(d, 1, {"s": np.int64(2**40)})
+    with pytest.raises(AssertionError, match="dtype"):
+        load_checkpoint(d, 1, {"s": np.zeros((), np.int32)})
+
+
+def test_load_missing_leaf_fails_actionably(tmp_path):
+    """A checkpoint written under an older state layout (a leaf the example
+    tree has is absent) must explain itself, not leak a raw KeyError."""
+    d = str(tmp_path)
+    save_checkpoint(d, 0, {"a": np.ones(2)})
+    with pytest.raises(ValueError, match="no leaf 'b'"):
+        load_checkpoint(d, 0, {"a": np.zeros(2), "b": np.zeros(1)})
+
+
+def test_checkpoint_keys_and_path_roundtrip(tmp_path):
+    d = str(tmp_path)
+    path = save_checkpoint(d, 3, {"a": np.ones(2), "b": {"c": np.ones(1)}},
+                           name="state")
+    assert path == checkpoint_path(d, 3, name="state")
+    assert sorted(checkpoint_keys(d, 3, name="state")) == ["a", "b::c"]
+    assert latest_step(d, name="state") == 3

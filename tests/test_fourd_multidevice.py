@@ -241,6 +241,65 @@ print("PASS")
 
 
 @pytest.mark.slow
+def test_epoch_schedule_communication_free_and_dp_identical():
+    """ISSUE-5 acceptance: the without-replacement epoch sample is a pure
+    function of (seed, epoch, step, dp_index) — identical on every device
+    of a DP group (asserted on the materialized per-device ids), distinct
+    across DP groups, without-replacement within each epoch, and the
+    sampling program lowers with ZERO collectives. A 2-epoch prefetch run
+    through the real Trainer then crosses the boundary inside the scan."""
+    _run(COMMON + """
+from jax.sharding import PartitionSpec as P
+from repro.core import pipeline as PL
+from repro.core.compat import shard_map
+from repro.optim import AdamW
+from repro.train import Trainer, TrainLoopConfig
+plan_e = fourd.build_plan(pg, cfg, mesh, batch=128,
+                          opts=fourd.TrainOptions(sample_mode="epoch"))
+builder = plan_e.builder
+spe = plan_e.scfg.steps_per_epoch
+assert spe == 4, spe                     # 512 / 128
+
+def local_ids(step, epoch):
+    s2d = builder.sample_ids(step, epoch, jax.lax.axis_index("d"))
+    return s2d[None, None, None, None]   # (1,1,1,1,g,b) per device
+
+ids_fn = shard_map(local_ids, mesh=plan_e.mesh, in_specs=(P(), P()),
+                   out_specs=P("d", "x", "y", "z"), check_vma=False)
+per_epoch = []
+for t in range(spe):
+    ids = np.array(ids_fn(jnp.asarray(t), jnp.asarray(0)))  # (2,2,2,2,g,b)
+    flat = ids.reshape(2, 8, -1)         # (d, devices-in-group, g*b)
+    for d in range(2):
+        # every device of a DP group derives the IDENTICAL sample...
+        assert (flat[d] == flat[d][0]).all(), (t, d)
+    # ...and the two DP groups train on different mini-batches
+    assert not (flat[0][0] == flat[1][0]).all(), t
+    per_epoch.append(flat[:, 0])
+for d in range(2):                       # without replacement per epoch
+    got = np.sort(np.concatenate([e[d] for e in per_epoch]))
+    assert (got == np.arange(512)).all(), d
+
+sample_fn, _ = PL.make_pipeline_fns(plan_e)
+lowered = jax.jit(sample_fn).lower(graph, jnp.asarray(0), jnp.asarray(0))
+txt = lowered.compile().as_text()
+import re
+bad = re.findall(r'(all-reduce|all-gather|reduce-scatter|all-to-all|'
+                 r'collective-permute)\\(', txt)
+assert not bad, f"epoch sampling is NOT communication-free: {set(bad)}"
+
+params_e = plan_e.shard_params(M.init_params(jax.random.PRNGKey(1), cfg))
+opt = AdamW(lr=5e-3)
+tr = Trainer(plan_e, opt, TrainLoopConfig(epochs=2, chunk_size=3,
+                                          prefetch=True))
+state, log = tr.run(tr.init_state(params_e, graph), graph)
+assert int(state.step) == 8 and int(state.epoch) == 2
+assert all(np.isfinite(log.losses)), log.losses
+print("PASS")
+""")
+
+
+@pytest.mark.slow
 def test_block_ell_spmm_path_matches_dense():
     """§Perf H3.4: the block-ELL extraction + Pallas SpMM path produces
     the same distributed loss and gradients as the dense-block path."""

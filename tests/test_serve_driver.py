@@ -146,6 +146,53 @@ def test_pump_thread_failure_surfaces_through_futures(served):
         assert drv._thread.is_alive()
 
 
+def test_close_drain_failure_fails_futures_not_hangs(served):
+    """Satellite: an engine failure during close()'s final drain must
+    resolve every in-flight future with the exception instead of leaving
+    waiters to hang until their own timeout — and close() itself must not
+    raise (it runs in __exit__/cleanup paths)."""
+    eng = _engine(served, max_delay_ms=10_000.0)
+    drv = ServingDriver(eng, starvation_ms=10_000.0, auto=False)
+    futs = [drv.submit([i, i + 1]) for i in range(3)]  # < slots
+    assert not any(f.done() for f in futs)       # parked behind the deadline
+
+    real_drain = eng.drain
+
+    def exploding_drain():
+        raise RuntimeError("injected drain failure")
+
+    eng.drain = exploding_drain
+    results, errs = [], []
+
+    def waiter(i):
+        # a concurrent result() waiter across the close: must unblock with
+        # the injected error, not time out
+        try:
+            with pytest.raises(RuntimeError,
+                               match="injected drain failure"):
+                futs[i].result(timeout=5)
+            results.append(i)
+        except Exception as e:
+            errs.append(e)
+
+    waiters = [threading.Thread(target=waiter, args=(i,)) for i in range(2)]
+    for t in waiters:
+        t.start()
+    time.sleep(0.05)                             # waiters parked in result()
+    drv.close()                                  # fails the drain
+    for t in waiters:
+        t.join(timeout=10)
+    assert not errs, errs
+    assert sorted(results) == [0, 1]
+    for f in futs:
+        assert f.done()
+        with pytest.raises(RuntimeError, match="injected drain failure"):
+            f.result(timeout=0)
+    assert isinstance(drv.last_error, RuntimeError)
+    eng.drain = real_drain
+    eng.drain()                                  # clear engine state
+
+
 def test_driver_rejects_replay_engines(served):
     eng = _engine(served)
     replay_eng = InferenceEngine(

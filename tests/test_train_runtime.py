@@ -13,6 +13,9 @@ criteria, runnable on one CPU device via the g_d = g = 1 mesh:
   routed through the engine's tail hook) agrees with the unfused
   reference — forward exactly, gradients to float tolerance.
 """
+import os
+import threading
+
 import numpy as np
 import jax
 import jax.numpy as jnp
@@ -22,6 +25,7 @@ from repro.core import fourd, gcn_model as M, pipeline as PL
 from repro.graphs import build_partitioned_graph, make_synthetic_dataset
 from repro.optim import AdamW
 from repro.train import Trainer, TrainLoopConfig, TrainState
+from repro.train import runner as runner_mod
 
 STEPS = 6
 
@@ -152,6 +156,314 @@ def test_eval_runs_once_per_report_boundary(setup, fresh_params):
     state, log2 = tr2.run(tr2.init_state(fresh_params(), graph), graph)
     assert len(calls) == 1 and log2.hit_target
     assert int(state.step) == 2                  # stopped at the boundary
+
+
+# ---------------------------------------------------------------------------
+# Multi-epoch without-replacement schedule (ISSUE-5 tentpole)
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def epoch_setup(setup):
+    """The same graph under the without-replacement schedule: n_pad = 256,
+    batch = 64 -> 4 steps per epoch."""
+    pg, cfg, mesh, _, _ = setup
+    plan = fourd.build_plan(
+        pg, cfg, mesh, batch=64,
+        opts=fourd.TrainOptions(dropout=0.2, sample_mode="epoch"))
+    return plan, plan.shard_graph(pg)
+
+
+@pytest.fixture()
+def epoch_params(setup, epoch_setup):
+    _, cfg, _, _, _ = setup
+    plan, _ = epoch_setup
+    return lambda: plan.shard_params(
+        M.init_params(jax.random.PRNGKey(1), cfg))
+
+
+def test_epoch_prefetch_crosses_boundary_bit_identical(epoch_setup,
+                                                       epoch_params):
+    """Tentpole acceptance: with chunk 3 over 2 epochs of 4 steps, the
+    §V-A prefetch carry crosses the epoch boundary INSIDE a scan chunk
+    (steps 3->4 live in the chunk covering steps 3-5) and the loss
+    sequence is bit-identical to prefetch-off."""
+    plan, graph = epoch_setup
+    opt = AdamW(lr=5e-3)
+    out = {}
+    for prefetch in (False, True):
+        tr = Trainer(plan, opt, TrainLoopConfig(
+            epochs=2, chunk_size=3, prefetch=prefetch))
+        assert tr.total_steps == 8 and tr.steps_per_epoch == 4
+        state, log = tr.run(tr.init_state(epoch_params(), graph), graph)
+        assert int(state.step) == 8 and int(state.epoch) == 2
+        out[prefetch] = log.losses
+    assert out[True] == out[False]               # bit-identical floats
+
+
+def test_epoch_schedule_changes_the_sample_stream(epoch_setup, setup,
+                                                  epoch_params,
+                                                  fresh_params):
+    """The without-replacement schedule is a different (deterministic)
+    sample stream from the per-step one — and re-running it reproduces
+    itself exactly."""
+    pg, cfg, mesh, plan_step, graph_step = setup
+    plan_e, graph_e = epoch_setup
+    opt = AdamW(lr=5e-3)
+
+    def losses(plan, graph, params):
+        tr = Trainer(plan, opt, TrainLoopConfig(total_steps=4,
+                                                chunk_size=2))
+        return tr.run(tr.init_state(params, graph), graph)[1].losses
+
+    a = losses(plan_e, graph_e, epoch_params())
+    b = losses(plan_e, graph_e, epoch_params())
+    c = losses(plan_step, graph_step, fresh_params())
+    assert a == b
+    assert a != c
+
+
+def test_mid_epoch_resume_bit_identical(epoch_setup, epoch_params,
+                                        tmp_path):
+    """Save at step 3 of a 4-step epoch (mid-epoch), restore into a fresh
+    Trainer, continue across the boundary: tail and final state must be
+    bit-identical to the uninterrupted 2-epoch run."""
+    plan, graph = epoch_setup
+    opt = AdamW(lr=5e-3)
+    loop = TrainLoopConfig(epochs=2, chunk_size=3, ckpt_dir=str(tmp_path),
+                           ckpt_every=3)
+    full_state, full_log = Trainer(plan, opt, loop).run(
+        Trainer(plan, opt, loop).init_state(epoch_params(), graph), graph)
+
+    resumed = Trainer(plan, opt, loop)
+    state = resumed.restore(resumed.init_state(epoch_params(), graph),
+                            step=3)
+    assert int(state.step) == 3 and int(state.epoch) == 0
+    state, log = resumed.run(state, graph)
+    assert int(state.epoch) == 2
+    assert log.losses == full_log.losses[3:]
+    for a, b in zip(jax.tree.leaves(full_state.params),
+                    jax.tree.leaves(state.params)):
+        assert np.array_equal(np.asarray(a), np.asarray(b))
+
+
+# ---------------------------------------------------------------------------
+# Async checkpointing (ISSUE-5 tentpole) + final-state save (satellite)
+# ---------------------------------------------------------------------------
+
+def test_async_save_byte_identical_to_sync(setup, fresh_params, tmp_path):
+    plan = setup[3]
+    graph = setup[4]
+    opt = AdamW(lr=5e-3)
+    tr = Trainer(plan, opt, TrainLoopConfig(total_steps=2))
+    state = tr.init_state(fresh_params(), graph)
+    d_sync, d_async = str(tmp_path / "sync"), str(tmp_path / "async")
+    p = tr.save(state, d_sync)
+    assert tr.save(state, d_async, sync=False, step=0) is None
+    tr.join_saves()
+    with open(p, "rb") as f:
+        sync_bytes = f.read()
+    with open(os.path.join(d_async, os.path.basename(p)), "rb") as f:
+        async_bytes = f.read()
+    assert sync_bytes == async_bytes
+
+
+def test_async_save_survives_donation_of_the_live_state(setup, fresh_params,
+                                                        tmp_path):
+    """The snapshot must be fetched from FRESH buffers: dispatching the
+    next (donating) chunk right after an async save must not corrupt or
+    invalidate the bytes being written."""
+    plan, graph = setup[3], setup[4]
+    opt = AdamW(lr=5e-3)
+    tr = Trainer(plan, opt, TrainLoopConfig(total_steps=4, chunk_size=2))
+    state = tr.init_state(fresh_params(), graph)
+    ref = jax.device_get(state)
+    tr.save(state, str(tmp_path), sync=False, step=0)
+    tr.compiled_chunk(2)(state, graph)           # donates state's buffers
+    tr.join_saves()
+    got = tr.restore(ref, str(tmp_path), step=0)
+    for a, b in zip(jax.tree.leaves(ref), jax.tree.leaves(got)):
+        assert np.array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_async_save_overlaps_and_join_reraises(setup, fresh_params,
+                                               tmp_path, monkeypatch):
+    """save(sync=False) returns while the write is still in flight (the
+    overlap), join_saves() waits for it, and a writer failure surfaces at
+    the join instead of disappearing on the worker thread."""
+    plan, graph = setup[3], setup[4]
+    opt = AdamW(lr=5e-3)
+    tr = Trainer(plan, opt, TrainLoopConfig(total_steps=2))
+    state = tr.init_state(fresh_params(), graph)
+
+    started, release = threading.Event(), threading.Event()
+    real = runner_mod.save_checkpoint
+
+    def gated(directory, step, tree, name="ckpt"):
+        started.set()
+        assert release.wait(10)
+        return real(directory, step, tree, name=name)
+
+    monkeypatch.setattr(runner_mod, "save_checkpoint", gated)
+    tr.save(state, str(tmp_path), sync=False, step=0)
+    assert started.wait(10)
+    assert tr._save_thread is not None           # still in flight: overlap
+    release.set()
+    tr.join_saves()
+    assert os.path.exists(
+        os.path.join(str(tmp_path), "state_00000000.npz"))
+
+    def boom(directory, step, tree, name="ckpt"):
+        raise IOError("disk full")
+
+    monkeypatch.setattr(runner_mod, "save_checkpoint", boom)
+    tr.save(state, str(tmp_path), sync=False, step=1)
+    with pytest.raises(IOError, match="disk full"):
+        tr.join_saves()
+
+
+def test_run_never_blocks_driver_on_device_get(setup, fresh_params,
+                                               tmp_path, monkeypatch):
+    """Acceptance: with async_ckpt on, every host fetch of checkpoint data
+    happens OFF the driver thread (the final boundary save included — the
+    run ends exactly on a ckpt_every boundary here)."""
+    plan, graph = setup[3], setup[4]
+    opt = AdamW(lr=5e-3)
+    fetch_threads = []
+    real = runner_mod._device_get
+
+    def spy(tree):
+        fetch_threads.append(threading.get_ident())
+        return real(tree)
+
+    monkeypatch.setattr(runner_mod, "_device_get", spy)
+    tr = Trainer(plan, opt, TrainLoopConfig(
+        total_steps=STEPS, chunk_size=2, ckpt_dir=str(tmp_path),
+        ckpt_every=2))
+    _, log = tr.run(tr.init_state(fresh_params(), graph), graph)
+    assert fetch_threads, "no checkpoint fetch happened at all"
+    assert threading.get_ident() not in fetch_threads
+    assert log.final_ckpt and os.path.exists(log.final_ckpt)
+
+
+def test_run_persists_final_state(setup, fresh_params, tmp_path):
+    """Satellite: run() itself saves the final state — total_steps off the
+    ckpt_every boundary AND target-accuracy early stops both persist,
+    without launch/train.py's (deleted) boundary arithmetic."""
+    plan, graph = setup[3], setup[4]
+    opt = AdamW(lr=5e-3)
+    d1 = str(tmp_path / "off-boundary")
+    tr = Trainer(plan, opt, TrainLoopConfig(
+        total_steps=5, chunk_size=2, ckpt_dir=d1, ckpt_every=4))
+    state, log = tr.run(tr.init_state(fresh_params(), graph), graph)
+    assert int(state.step) == 5
+    assert log.final_ckpt.endswith("state_00000005.npz")
+    assert os.path.exists(log.final_ckpt)
+    assert os.path.exists(os.path.join(d1, "state_00000004.npz"))
+
+    d2 = str(tmp_path / "target-stop")
+    tr2 = Trainer(plan, opt, TrainLoopConfig(
+        total_steps=STEPS, chunk_size=2, eval_every=2, target_acc=0.0,
+        ckpt_dir=d2))
+    state2, log2 = tr2.run(tr2.init_state(fresh_params(), graph), graph)
+    assert log2.hit_target and int(state2.step) == 2
+    assert log2.final_ckpt.endswith("state_00000002.npz")
+    assert os.path.exists(log2.final_ckpt)
+
+    # restore-from-final continues without re-running anything
+    tr3 = Trainer(plan, opt, TrainLoopConfig(
+        total_steps=5, chunk_size=2, ckpt_dir=d1))
+    st = tr3.restore(tr3.init_state(fresh_params(), graph))
+    assert int(st.step) == 5
+    st, log3 = tr3.run(st, graph)
+    assert log3.losses == [] and int(st.step) == 5
+
+
+# ---------------------------------------------------------------------------
+# Prefetch-flag mismatch on restore (satellite)
+# ---------------------------------------------------------------------------
+
+def test_restore_prefetch_from_plain_ckpt_rebuilds_warmup(setup,
+                                                          fresh_params,
+                                                          tmp_path):
+    """Resuming WITH --prefetch from a checkpoint written without it used
+    to die with a raw KeyError; now it either rebuilds the warm-up batch
+    (graph given — continuation bit-identical to an all-prefetch run) or
+    fails with an actionable message."""
+    plan, graph = setup[3], setup[4]
+    opt = AdamW(lr=5e-3)
+    d = str(tmp_path)
+    off = Trainer(plan, opt, TrainLoopConfig(
+        total_steps=4, chunk_size=2, ckpt_dir=d))
+    off.run(off.init_state(fresh_params(), graph), graph)
+
+    on = Trainer(plan, opt, TrainLoopConfig(
+        total_steps=STEPS, chunk_size=2, prefetch=True, ckpt_dir=d))
+    example = on.init_state(fresh_params(), graph)
+    with pytest.raises(ValueError, match="prefetch"):
+        on.restore(example)                      # no graph -> actionable
+    state = on.restore(example, graph=graph)
+    assert int(state.step) == 4 and state.minibatch is not None
+    state, log = on.run(state, graph)
+
+    ref = Trainer(plan, opt, TrainLoopConfig(
+        total_steps=STEPS, chunk_size=2, prefetch=True))
+    _, ref_log = ref.run(ref.init_state(fresh_params(), graph), graph)
+    assert log.losses == ref_log.losses[4:]      # bit-identical tail
+
+
+def test_restore_pre_epoch_ckpt_backfills_counter(epoch_setup, epoch_params,
+                                                  tmp_path):
+    """A PR-4-layout checkpoint (no ``.epoch`` leaf) must still resume:
+    the counter is derivable from the step, so restore backfills it
+    instead of dying on the missing leaf."""
+    import dataclasses as dc
+    plan, graph = epoch_setup
+    opt = AdamW(lr=5e-3)
+    loop = TrainLoopConfig(epochs=2, chunk_size=3, ckpt_dir=str(tmp_path))
+    tr = Trainer(plan, opt, loop)
+    tr.run(tr.init_state(epoch_params(), graph), graph)
+
+    # rewrite a mid-epoch-1 state in the OLD layout: epoch leaf stripped
+    mid = Trainer(plan, opt, loop)
+    st8 = mid.restore(mid.init_state(epoch_params(), graph), step=8)
+    old = dc.replace(st8, step=np.asarray(6, np.int32), epoch=None)
+    runner_mod.save_checkpoint(str(tmp_path), 6, old,
+                               name=runner_mod.CKPT_NAME)
+
+    resumed = Trainer(plan, opt, loop)
+    state = resumed.restore(resumed.init_state(epoch_params(), graph),
+                            step=6)
+    assert int(state.step) == 6 and int(state.epoch) == 1   # backfilled
+
+
+def test_cli_rejects_steps_with_epochs():
+    from repro.launch import train as cli
+    with pytest.raises(SystemExit, match="mutually exclusive"):
+        cli.main(["--steps", "4", "--epochs", "1"])
+
+
+def test_restore_plain_from_prefetch_ckpt_drops_carry(setup, fresh_params,
+                                                      tmp_path):
+    """The reverse direction: the saved carry is redundant (a pure function
+    of (seed, epoch, step)) and is dropped deliberately — the continuation
+    still bit-matches the uninterrupted non-prefetch run."""
+    plan, graph = setup[3], setup[4]
+    opt = AdamW(lr=5e-3)
+    d = str(tmp_path)
+    on = Trainer(plan, opt, TrainLoopConfig(
+        total_steps=4, chunk_size=2, prefetch=True, ckpt_dir=d))
+    on.run(on.init_state(fresh_params(), graph), graph)
+
+    off = Trainer(plan, opt, TrainLoopConfig(
+        total_steps=STEPS, chunk_size=2, ckpt_dir=d))
+    state = off.restore(off.init_state(fresh_params(), graph))
+    assert int(state.step) == 4 and state.minibatch is None
+    state, log = off.run(state, graph)
+
+    ref = Trainer(plan, opt, TrainLoopConfig(total_steps=STEPS,
+                                             chunk_size=2))
+    _, ref_log = ref.run(ref.init_state(fresh_params(), graph), graph)
+    assert log.losses == ref_log.losses[4:]
 
 
 @pytest.mark.parametrize("dropout", [0.0, 0.3])
