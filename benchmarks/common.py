@@ -1,14 +1,39 @@
-"""Shared helpers for benchmark modules."""
+"""Shared helpers for benchmark modules.
+
+``time_fn`` returns a :class:`Timing` with median/p10/p90 µs (not a bare
+median — the spread is what makes a committed baseline comparable against
+a noisy re-run). ``csv`` remains THE single reporting call: it prints the
+stdout CSV row the harness aggregates AND feeds the same numbers to the
+``BENCH_<name>.json`` writer (``repro.obs.bench.BenchWriter``) when one is
+active, so no benchmark reports through two divergent paths. A writer is
+activated by ``set_bench(...)`` and flushed at process exit whenever the
+``REPRO_BENCH_JSON`` env var names an output directory (``benchmarks/run.py
+--json`` sets it for every subprocess).
+"""
 from __future__ import annotations
 
+import atexit
+import os
 import time
-from typing import Callable
+from typing import Callable, NamedTuple, Optional, Union
 
 import jax
 
+from repro.obs.bench import BenchWriter
 
-def time_fn(fn: Callable, *args, warmup: int = 2, iters: int = 10) -> float:
-    """Median wall time per call in microseconds (blocking on results)."""
+BENCH_JSON_ENV = "REPRO_BENCH_JSON"
+
+
+class Timing(NamedTuple):
+    """Per-call wall time, microseconds."""
+
+    median: float
+    p10: float
+    p90: float
+
+
+def time_fn(fn: Callable, *args, warmup: int = 2, iters: int = 10) -> Timing:
+    """Median/p10/p90 wall time per call in µs (blocking on results)."""
     for _ in range(warmup):
         jax.block_until_ready(fn(*args))
     times = []
@@ -17,8 +42,43 @@ def time_fn(fn: Callable, *args, warmup: int = 2, iters: int = 10) -> float:
         jax.block_until_ready(fn(*args))
         times.append(time.perf_counter() - t0)
     times.sort()
-    return times[len(times) // 2] * 1e6
+    n = len(times)
+    return Timing(median=times[n // 2] * 1e6,
+                  p10=times[int(0.1 * (n - 1))] * 1e6,
+                  p90=times[int(0.9 * (n - 1))] * 1e6)
 
 
-def csv(name: str, us: float, derived: str = "") -> None:
-    print(f"{name},{us:.1f},{derived}", flush=True)
+_WRITER: Optional[BenchWriter] = None
+
+
+def set_bench(name: str, **config) -> Optional[BenchWriter]:
+    """Declare this process's benchmark; rows from ``csv`` accumulate into
+    ``BENCH_<name>.json``, written at exit iff ``REPRO_BENCH_JSON`` is set."""
+    global _WRITER
+    _WRITER = BenchWriter(name, config=config)
+    return _WRITER
+
+
+def get_bench() -> Optional[BenchWriter]:
+    return _WRITER
+
+
+@atexit.register
+def _flush_bench() -> None:
+    directory = os.environ.get(BENCH_JSON_ENV)
+    if _WRITER is not None and _WRITER.entries and directory:
+        path = _WRITER.write(directory)
+        print(f"# wrote {path}", flush=True)
+
+
+def csv(name: str, us: Union[Timing, float], derived: str = "",
+        comm_bytes: Optional[int] = None) -> None:
+    """One result row: stdout CSV + (when a bench is set) the JSON entry."""
+    if isinstance(us, Timing):
+        median, p10, p90 = us
+    else:
+        median, p10, p90 = float(us), None, None
+    print(f"{name},{median:.1f},{derived}", flush=True)
+    if _WRITER is not None:
+        _WRITER.add(name, median, p10_us=p10, p90_us=p90, derived=derived,
+                    comm_bytes=comm_bytes)

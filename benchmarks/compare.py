@@ -1,0 +1,78 @@
+"""Diff fresh ``BENCH_<name>.json`` runs against the committed baselines.
+
+    PYTHONPATH=src python -m benchmarks.compare --current /tmp/bench \
+        --against-baseline
+
+The committed baselines live in ``benchmarks/baseline/``. A row flags as a
+regression only when the current median exceeds the baseline median by the
+threshold (default 30%) AND lands above the baseline's recorded p90 noise
+band — CI runners are noisy, so the report is non-blocking by default;
+``--strict`` turns regressions into a non-zero exit for local gating.
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import os
+import sys
+
+sys.path.insert(0, os.path.join(
+    os.path.dirname(os.path.dirname(os.path.abspath(__file__))), "src"))
+
+from repro.obs.bench import compare_entries, load_bench  # noqa: E402
+
+BASELINE_DIR = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                            "baseline")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--current", required=True,
+                    help="directory of freshly-written BENCH_*.json files")
+    ap.add_argument("--against-baseline", action="store_true",
+                    help="compare against the committed benchmarks/baseline/")
+    ap.add_argument("--baseline-dir", default=BASELINE_DIR,
+                    help="override the baseline directory")
+    ap.add_argument("--threshold", type=float, default=0.30,
+                    help="relative median change that counts (default 0.30)")
+    ap.add_argument("--strict", action="store_true",
+                    help="exit non-zero on any regression (default: report "
+                         "only — CI runs this non-blocking)")
+    args = ap.parse_args()
+
+    baseline_dir = args.baseline_dir
+    current_files = sorted(glob.glob(
+        os.path.join(args.current, "BENCH_*.json")))
+    if not current_files:
+        print(f"no BENCH_*.json under {args.current}")
+        return
+
+    n_reg = n_imp = n_ok = 0
+    for cur_path in current_files:
+        base_path = os.path.join(baseline_dir, os.path.basename(cur_path))
+        cur = load_bench(cur_path)
+        if not os.path.exists(base_path):
+            print(f"[new] {cur['name']}: no committed baseline "
+                  f"({len(cur.get('entries', []))} entries)")
+            continue
+        base = load_bench(base_path)
+        rows = compare_entries(cur, base, threshold=args.threshold)
+        print(f"\n== {cur['name']}  (baseline {base.get('git_sha')} -> "
+              f"current {cur.get('git_sha')})")
+        for r in rows:
+            mark = {"regression": "!!", "improvement": "++", "ok": "  "}
+            print(f"  {mark[r['status']]} {r['name']:32s} "
+                  f"{r['baseline_us']:12.1f} -> {r['current_us']:12.1f} us "
+                  f"(x{r['ratio']:.2f})")
+            n_reg += r["status"] == "regression"
+            n_imp += r["status"] == "improvement"
+            n_ok += r["status"] == "ok"
+
+    print(f"\n{n_ok} ok, {n_imp} improved, {n_reg} regressed "
+          f"(threshold {args.threshold:.0%} beyond baseline noise band)")
+    if n_reg and args.strict:
+        raise SystemExit(f"{n_reg} perf regressions (strict mode)")
+
+
+if __name__ == "__main__":
+    main()

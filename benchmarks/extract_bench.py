@@ -17,7 +17,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import csv, time_fn
+from benchmarks.common import csv, set_bench, time_fn
 from repro.configs.gcn_paper import paper_model
 from repro.core import fourd, gcn_model as M, pipeline as PL, sampling as S
 from repro.graphs import build_partitioned_graph, make_synthetic_dataset
@@ -31,6 +31,7 @@ AVG_DEG = 16
 
 
 def main():
+    set_bench("extract_bench", n=N, batch=B, avg_degree=AVG_DEG)
     cfg = paper_model("ogbn-products")     # exercises the real config path
     ds = make_synthetic_dataset(n=N, num_classes=cfg.num_classes, d_in=32,
                                 avg_degree=AVG_DEG, seed=0)
@@ -64,9 +65,9 @@ def main():
 
     nnz = int((ref != 0).sum())
     csv("extract_dense_jax", us_dense, f"B={B} nnz={nnz}")
-    csv("extract_ell_jax", us_ell, f"dense_jax={us_dense:.1f}us")
+    csv("extract_ell_jax", us_ell, f"dense_jax={us_dense.median:.1f}us")
     csv("extract_fused_pallas", us_fused,
-        f"dense_jax={us_dense:.1f}us max_deg={md} (interpret mode)")
+        f"dense_jax={us_dense.median:.1f}us max_deg={md} (interpret mode)")
 
     # builder end-to-end (sample + 3 planes + slices) at g = 1
     pg = build_partitioned_graph(ds, g=1)

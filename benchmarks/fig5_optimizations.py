@@ -9,7 +9,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from benchmarks.common import csv, time_fn
+from benchmarks.common import csv, set_bench, time_fn
 from repro.core import fourd, pipeline as PL
 from repro.graphs import build_partitioned_graph, make_synthetic_dataset
 from repro.launch.roofline import analyze_hlo
@@ -59,11 +59,13 @@ def measure(name, opts, prefetch=False):
         lambda p_, g_, s_: loss_fn(p_, g_, s_).mean())).lower(
             params, graph, jnp.asarray(0))
     coll = analyze_hlo(lowered.compile().as_text())["coll_total"]
-    csv(f"fig5_{name}", us, f"coll_bytes_per_dev={coll:.3e}")
-    return us, coll
+    csv(f"fig5_{name}", us, f"coll_bytes_per_dev={coll:.3e}",
+        comm_bytes=int(coll))
+    return us.median, coll
 
 
 def main():
+    set_bench("fig5", devices=8, grid="2x2x2", steps_timed=STEPS_TIMED)
     base_us, base_coll = measure("baseline", fourd.TrainOptions(dropout=0.1))
     us1, _ = measure("plus_prefetch", fourd.TrainOptions(dropout=0.1),
                      prefetch=True)

@@ -15,10 +15,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import csv
+from benchmarks.common import csv, set_bench
 from repro.core import baselines as BL
 from repro.core import fourd, gcn_model as M, sampling as S
 from repro.graphs import build_partitioned_graph, make_synthetic_dataset
+from repro.obs import Tracer
 from repro.optim import AdamW
 from repro.train import Trainer, TrainLoopConfig
 
@@ -27,9 +28,12 @@ MAX_STEPS = 400
 B = 256
 ABLATION_STEPS = 64                   # divisible by every chunk size below
 ABLATION_CHUNKS = (1, 8, 32)
+TRACER_REPS = 5                       # alternating on/off reps (medians)
 
 
 def main():
+    set_bench("fig6", n=2048, batch=B, target=TARGET,
+              max_steps=MAX_STEPS)
     ds = make_synthetic_dataset(n=2048, num_classes=8, d_in=32,
                                 avg_degree=16, seed=7)
     A = ds.adj_norm
@@ -85,6 +89,33 @@ def main():
         dt = time.perf_counter() - t0
         csv(f"fig6_scan_chunk{chunk}", dt / ABLATION_STEPS * 1e6,
             f"steps={ABLATION_STEPS} per-step")
+
+    # --- tracer overhead: identical runs with host spans on vs off. The
+    # spans sit at chunk boundaries (one perf_counter pair per chunk), so
+    # the two ms/step figures must agree within noise (<2% acceptance).
+    # Run-to-run spread on a loaded host is ~8%, so a single pair proves
+    # nothing: take the median over alternating repeats of each mode.
+    trainers = {}
+    for mode, enabled in (("off", False), ("on", True)):
+        tr = Trainer(plan, opt,
+                     TrainLoopConfig(total_steps=ABLATION_STEPS,
+                                     chunk_size=8),
+                     tracer=Tracer(enabled=enabled))
+        tr.run(tr.init_state(fresh4(), graph), graph)        # compile
+        trainers[mode] = tr
+    reps = {"off": [], "on": []}
+    for _ in range(TRACER_REPS):
+        for mode, tr in trainers.items():
+            _, tlog = tr.run(tr.init_state(fresh4(), graph), graph)
+            reps[mode].append(tlog.ms_per_step)
+    ms = {mode: float(np.median(xs)) for mode, xs in reps.items()}
+    for mode, xs in reps.items():
+        csv(f"fig6_tracer_{mode}", ms[mode] * 1e3,
+            f"steps={ABLATION_STEPS} reps={TRACER_REPS} "
+            f"spread={min(xs):.2f}..{max(xs):.2f}ms")
+    overhead = (ms["on"] - ms["off"]) / ms["off"] * 100
+    print(f"# tracer overhead: {overhead:+.2f}% ms/step, median of "
+          f"{TRACER_REPS} alternating reps (acceptance: |overhead| < 2%)")
 
     # --- baselines (single device, the algorithms of the baseline systems)
     for name in ("saint", "sage"):

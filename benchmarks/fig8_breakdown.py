@@ -9,7 +9,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from benchmarks.common import csv, time_fn
+from benchmarks.common import csv, set_bench, time_fn
 from repro.core import fourd, pipeline as PL
 from repro.core import gcn_model as GM
 from repro.graphs import build_partitioned_graph, make_synthetic_dataset
@@ -52,17 +52,18 @@ def breakdown(gd: int):
 
 
 def main():
+    set_bench("fig8", batch=256, grid="2x2x2")
     s1, t1, c1 = breakdown(1)
     csv("fig8_gd1_sampling", s1, "sampling+extraction only")
-    csv("fig8_gd1_step", t1, f"coll_bytes={c1:.3e}")
+    csv("fig8_gd1_step", t1, f"coll_bytes={c1:.3e}", comm_bytes=int(c1))
     s2, t2, c2 = breakdown(2)
     csv("fig8_gd2_sampling", s2, "sampling+extraction only")
-    csv("fig8_gd2_step", t2, f"coll_bytes={c2:.3e}")
+    csv("fig8_gd2_step", t2, f"coll_bytes={c2:.3e}", comm_bytes=int(c2))
     print(f"# DP all-reduce adds {c2 - c1:.3e} collective bytes/device "
           f"(paper Fig. 8: DP all-reduce grows with G_d; PMM+sampling "
           f"stay constant)")
-    print(f"# sampling time roughly constant across G_d: {s1:.0f}us -> "
-          f"{s2:.0f}us")
+    print(f"# sampling time roughly constant across G_d: "
+          f"{s1.median:.0f}us -> {s2.median:.0f}us")
 
 
 if __name__ == "__main__":

@@ -51,6 +51,10 @@ def main() -> None:
     ap.add_argument("--check-imports", action="store_true",
                     help="import every registered module and exit (the CI "
                          "bench-smoke guard against unimportable rot)")
+    ap.add_argument("--json", metavar="DIR", default=None,
+                    help="write BENCH_<name>.json perf artifacts into DIR "
+                         "(sets REPRO_BENCH_JSON for every benchmark "
+                         "subprocess)")
     args = ap.parse_args()
 
     if args.list:
@@ -67,6 +71,10 @@ def main() -> None:
         return
 
     repo = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    json_dir = None
+    if args.json:
+        json_dir = os.path.abspath(args.json)
+        os.makedirs(json_dir, exist_ok=True)
     all_rows = []
     failures = []
     for module, n_dev, desc in BENCHMARKS:
@@ -75,6 +83,8 @@ def main() -> None:
         print(f"\n=== {module} — {desc}", flush=True)
         env = dict(os.environ)
         env["PYTHONPATH"] = os.path.join(repo, "src") + os.pathsep + repo
+        if json_dir:
+            env["REPRO_BENCH_JSON"] = json_dir
         if n_dev > 0:
             env["XLA_FLAGS"] = (
                 f"--xla_force_host_platform_device_count={n_dev}")
@@ -91,6 +101,12 @@ def main() -> None:
     print("\n=== aggregated CSV (name,us_per_call,derived) ===")
     for row in all_rows:
         print(row)
+    if json_dir:
+        import glob
+        wrote = sorted(glob.glob(os.path.join(json_dir, "BENCH_*.json")))
+        print(f"\n=== JSON artifacts in {json_dir} ===")
+        for p in wrote:
+            print(os.path.basename(p))
     if failures:
         raise SystemExit(f"benchmarks failed: {failures}")
 

@@ -14,14 +14,19 @@ Emits CSV rows ``name,us_per_request,derived`` for the run.py aggregator.
 from __future__ import annotations
 
 import argparse
+import os
+import sys
 import time
 
 import jax
 import numpy as np
 
-from repro.core import gcn_model as M
-from repro.graphs import make_synthetic_dataset
-from repro.serve import InferenceEngine, ServeOptions
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(
+    __file__))))
+from benchmarks.common import csv, set_bench  # noqa: E402
+from repro.core import gcn_model as M  # noqa: E402
+from repro.graphs import make_synthetic_dataset  # noqa: E402
+from repro.serve import InferenceEngine, ServeOptions  # noqa: E402
 
 
 def run_mode(name: str, params, cfg, ds, opts: ServeOptions,
@@ -45,10 +50,11 @@ def run_mode(name: str, params, cfg, ds, opts: ServeOptions,
     rps = len(stream) / dt
     us_per_req = dt / len(stream) * 1e6
     derived = (f"p50_ms={st['p50_ms']:.3f};p99_ms={st['p99_ms']:.3f};"
-               f"rps={rps:.0f};device_calls={st['device_calls']}")
+               f"rps={rps:.0f};device_calls={st['device_calls']};"
+               f"occupancy={st['occupancy']:.2f}")
     if "cache" in st:
         derived += f";hit_rate={st['cache']['hit_rate']:.2f}"
-    print(f"serve_{name},{us_per_req:.1f},{derived}", flush=True)
+    csv(f"serve_{name}", us_per_req, derived)
     return {"rps": rps, "p50_ms": st["p50_ms"], "p99_ms": st["p99_ms"],
             "device_calls": st["device_calls"]}
 
@@ -66,6 +72,8 @@ def main() -> None:
     slots = 32 if args.smoke else 64
     support = 96 if args.smoke else 192
 
+    set_bench("serve_bench", n=n, requests=n_req, slots=slots,
+              support=support)
     ds = make_synthetic_dataset(n=n, num_classes=8, d_in=32,
                                 avg_degree=8, seed=0)
     cfg = M.GCNConfig(d_in=ds.feature_dim, d_hidden=64, num_layers=2,

@@ -45,6 +45,7 @@ import jax.numpy as jnp
 from repro.core import pmm3d
 from repro.core.gcn_model import GCNConfig
 from repro.kernels import ops as kops
+from repro.obs.tracer import phase
 
 BACKENDS = ("dense", "ell", "csr")
 
@@ -227,19 +228,28 @@ class ForwardEngine:
         # F (x, y)
         h = pmm3d.pmm_matmul(x_local, params["w_in"], "z", bf16=bf16)
 
+        # Fig. 8 phase annotations: jax.named_scope labels land in the HLO
+        # metadata / profiler timeline; under jit the host spans measure
+        # trace time only (wall-time spans live at the host boundaries in
+        # the Trainer and serving driver).
         for li, layer in enumerate(params["layers"]):
-            agg = self.aggregate(adj_blocks[li % len(adj_blocks)], h, st)
+            with phase("spmm"):
+                agg = self.aggregate(adj_blocks[li % len(adj_blocks)], h, st)
             # GEMM (Eq. 6 / 28): H (p, c) @ W (c, r) -> psum c -> conv (p, r)
-            conv = pmm3d.pmm_matmul(agg, layer["w"], st.col, bf16=bf16)
+            with phase("gemm"):
+                conv = pmm3d.pmm_matmul(agg, layer["w"], st.col, bf16=bf16)
             # residual must move (r, c) -> (p, r) (paper §IV-C4)
             res = None
             if cfg.use_residual:
-                res = pmm3d.reshard(h, st, (st.rep, st.row),
-                                    impl=opts.reshard_impl)
+                with phase("reshard"):
+                    res = pmm3d.reshard(h, st, (st.rep, st.row),
+                                        impl=opts.reshard_impl)
             dk = (_dropout_key(opts, step, li, st.rep, st.row, self.dp_axis)
                   if train and opts.dropout > 0 else None)
-            h = self.tail(conv, res, layer["rms_scale"], st, dk, train)
-            st = st.rotate()
+            with phase("tail"):
+                h = self.tail(conv, res, layer["rms_scale"], st, dk, train)
+            with phase("rotate"):
+                st = st.rotate()
 
         # output head (Eq. 11): X (r, c) @ W_out (c, p) -> psum c ->
         # logits (r, p) rep c

@@ -52,6 +52,7 @@ import jax.numpy as jnp
 
 from repro.core import pmm3d
 from repro.core import sampling as smp
+from repro.obs.tracer import phase
 
 
 class BlockFormat(enum.Enum):
@@ -344,15 +345,16 @@ class MinibatchBuilder:
         s2d = self.sample_ids(step, epoch,
                               jax.lax.axis_index(dp_axis))  # (g, b) ids
         inv_same, inv_cross = self.rescale_constants()
-        blocks = self.extract_plane_blocks(
-            shards, s2d, num_layers,
-            col_scale_fn=lambda i, j: smp.stratified_col_scale(
-                i, j, inv_same, inv_cross))
-        # features on plane (x, z): rows = sample of range x_coord
-        x_local = self.local_rows(feats_loc, s2d, "x")
-        # labels sharded over the final row axis
-        r_f = pmm3d.state_after_layers(num_layers).row
-        y_local = self.local_rows(labels_loc, s2d, r_f)
+        with phase("extract"):
+            blocks = self.extract_plane_blocks(
+                shards, s2d, num_layers,
+                col_scale_fn=lambda i, j: smp.stratified_col_scale(
+                    i, j, inv_same, inv_cross))
+            # features on plane (x, z): rows = sample of range x_coord
+            x_local = self.local_rows(feats_loc, s2d, "x")
+            # labels sharded over the final row axis
+            r_f = pmm3d.state_after_layers(num_layers).row
+            y_local = self.local_rows(labels_loc, s2d, r_f)
         return Minibatch(adj=blocks, feats=x_local, labels=y_local)
 
     # -- the single-device path (oracles, baselines, ablations) --------------

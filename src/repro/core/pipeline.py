@@ -33,6 +33,7 @@ from repro.core import pmm3d
 from repro.core.compat import shard_map
 from repro.core.fourd import FourDPlan
 from repro.core.minibatch import BlockFormat, GraphShards, Minibatch
+from repro.obs.tracer import phase
 
 
 @jax.tree_util.register_dataclass
@@ -106,9 +107,12 @@ def make_pipeline_fns(plan: FourDPlan):
     def sample_fn(graph, step, epoch=None) -> Minibatch:
         if epoch is None:
             epoch = builder.epoch_of(step)
-        return sample_sharded(GraphShards.from_graph(graph),
-                              graph["features"], graph["labels"], step,
-                              epoch)
+        # "sample" is a Fig. 8 phase: wall time is real here when called
+        # eagerly (warm-up), trace time when called under jit (prefetch).
+        with phase("sample"):
+            return sample_sharded(GraphShards.from_graph(graph),
+                                  graph["features"], graph["labels"], step,
+                                  epoch)
 
     def local_loss(params, mb: Minibatch, step):
         mb = mb.strip_leading()

@@ -16,7 +16,6 @@ os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
 # (no `from __future__` import: the XLA_FLAGS lines must stay first)
 import argparse
 import json
-import re
 import time
 import traceback
 from typing import Any, Dict
@@ -192,44 +191,20 @@ def build_step(cfg: ModelConfig, shape: InputShape, mesh):
 
 
 # ---------------------------------------------------------------------------
-# Collective-byte extraction from partitioned HLO
+# Collective-byte extraction from partitioned HLO — delegated to the shared
+# analyzer in repro.obs.hlo (same regexes, ONE owner; this module predates
+# it and keeps the thin Dict-returning wrapper its reports were built on)
 # ---------------------------------------------------------------------------
 
-_DTYPE_BYTES = {"f64": 8, "f32": 4, "f16": 2, "bf16": 2, "s64": 8,
-                "s32": 4, "u64": 8, "u32": 4, "s16": 2, "u16": 2,
-                "s8": 1, "u8": 1, "pred": 1, "f8e4m3fn": 1, "f8e5m2": 1}
+from repro.obs import hlo as _obs_hlo  # noqa: E402
 
-_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
-                "collective-permute")
-
-_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
-
-
-def _shape_bytes(shape_str: str) -> int:
-    total = 0
-    for dt, dims in _SHAPE_RE.findall(shape_str):
-        if dt not in _DTYPE_BYTES:
-            continue
-        n = 1
-        for d in dims.split(","):
-            if d:
-                n *= int(d)
-        total += n * _DTYPE_BYTES[dt]
-    return total
+_COLLECTIVES = _obs_hlo.COLLECTIVES
 
 
 def collective_bytes(hlo_text: str) -> Dict[str, int]:
     """Per-device bytes produced by each collective category, parsed from
     the partitioned module (result shapes; a conservative volume proxy)."""
-    out = {k: 0 for k in _COLLECTIVES}
-    for line in hlo_text.splitlines():
-        ls = line.strip()
-        m = re.match(r"(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(\([^)]*\)|\S+)\s+"
-                     r"(all-reduce|all-gather|reduce-scatter|all-to-all|"
-                     r"collective-permute)", ls)
-        if m:
-            out[m.group(2)] += _shape_bytes(m.group(1))
-    return out
+    return dict(_obs_hlo.parse_hlo(hlo_text).bytes)
 
 
 # ---------------------------------------------------------------------------

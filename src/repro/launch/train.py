@@ -21,12 +21,15 @@ final state is always persisted by ``run()`` itself. Example::
 from __future__ import annotations
 
 import argparse
+import dataclasses
+import json
 import time
 
 import jax
 
 from repro.core import fourd, gcn_model as GM
 from repro.graphs import build_partitioned_graph, get_dataset
+from repro.obs import Tracer, set_tracer
 from repro.optim import AdamW, linear_warmup_cosine
 from repro.train import Trainer, TrainLoopConfig
 
@@ -74,6 +77,12 @@ def build_argparser() -> argparse.ArgumentParser:
     ap.add_argument("--resume", action="store_true",
                     help="continue from the latest TrainState in --ckpt-dir")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--metrics-json", default=None, metavar="PATH",
+                    help="dump the full RunLog + tracer span summary as "
+                         "JSON (for scripted runs)")
+    ap.add_argument("--trace-dir", default=None, metavar="DIR",
+                    help="capture a jax.profiler trace of the run into DIR "
+                         "(phase names label the timeline)")
     return ap
 
 
@@ -115,7 +124,10 @@ def main(argv=None):
         prefetch=args.prefetch, eval_every=args.eval_every,
         target_acc=args.target_acc, ckpt_dir=args.ckpt_dir,
         ckpt_every=args.ckpt_every, async_ckpt=not args.sync_ckpt)
-    trainer = Trainer(plan, opt, loop)
+    # one tracer for the whole run: library phases (sample/extract/engine)
+    # report to the global, the Trainer's host boundaries to the same one
+    tracer = set_tracer(Tracer(enabled=True, trace_dir=args.trace_dir))
+    trainer = Trainer(plan, opt, loop, tracer=tracer)
 
     state = trainer.init_state(
         plan.shard_params(GM.init_params(jax.random.PRNGKey(args.seed), cfg)),
@@ -145,7 +157,11 @@ def main(argv=None):
         print(f"step {step:5d}  loss {loss:.4f}  "
               f"full-graph acc {acc:.4f}  t={time.time()-t0:.1f}s")
 
-    state, log = trainer.run(state, graph, report=report)
+    tracer.start_profile()
+    try:
+        state, log = trainer.run(state, graph, report=report)
+    finally:
+        tracer.stop_profile()
 
     # the final accuracy: reuse the boundary eval when it already covered
     # the last step (never evaluate twice for one report)
@@ -159,6 +175,25 @@ def main(argv=None):
     if log.final_ckpt:
         # run() persists the final state itself (boundary-saved or not)
         print("checkpoint:", log.final_ckpt)
+    print(f"ms/step {log.ms_per_step:.2f}  eval_s {log.eval_s:.2f}  "
+          f"ckpt_overlap_s {log.ckpt_overlap_s:.2f}")
+
+    if args.metrics_json:
+        doc = {
+            "run": {
+                "dataset": ds.name, "mesh": dict(mesh.shape),
+                "batch": args.batch, "steps": total_steps,
+                "sample_mode": args.sample_mode,
+                "prefetch": args.prefetch, "chunk_size": args.chunk_size,
+                "final_acc": acc, "wall_s": dt,
+            },
+            "runlog": dataclasses.asdict(log),
+            "spans": tracer.summary(),
+        }
+        with open(args.metrics_json, "w") as f:
+            json.dump(doc, f, indent=1)
+            f.write("\n")
+        print("metrics:", args.metrics_json)
 
 
 if __name__ == "__main__":

@@ -1,0 +1,30 @@
+"""Telemetry: phase spans, HLO comm accounting, serving metrics, BENCH JSON.
+
+The observable seam for the paper's evidence artifacts — Fig. 8 per-phase
+breakdowns (``Tracer`` / ``phase``), the zero-sampling-collectives invariant
+(``comm_report``), serving tail latencies (``LatencyHistogram``), and the
+persisted ``BENCH_<name>.json`` perf trajectory (``BenchWriter``).
+"""
+from repro.obs.bench import (  # noqa: F401
+    BenchEntry,
+    BenchWriter,
+    compare_entries,
+    git_sha,
+    load_bench,
+)
+from repro.obs.hlo import (  # noqa: F401
+    COLLECTIVES,
+    CommReport,
+    assert_no_collectives,
+    comm_report,
+    parse_hlo,
+    shape_bytes,
+)
+from repro.obs.metrics import LatencyHistogram  # noqa: F401
+from repro.obs.tracer import (  # noqa: F401
+    PHASES,
+    Tracer,
+    get_tracer,
+    phase,
+    set_tracer,
+)

@@ -1,0 +1,120 @@
+"""HLO communication accounting: the assertable seam for bytes-on-wire.
+
+``comm_report(fn, *args)`` lowers + compiles a function and walks the
+optimized HLO for collective ops, returning per-category **op counts** and
+**byte totals** (per device, from the result shapes — the same conservative
+volume proxy ``launch/dryrun.py`` ships in its reports, which now routes
+through this module). This replaces the one-off ``re.findall`` HLO greps the
+multidevice tests used for the paper's zero-sampling-collectives claim, and
+is the measurement seam the ROADMAP compression work ("≥4× bytes-on-wire")
+asserts against.
+
+Byte convention: for each collective instruction we count the bytes of its
+RESULT shape on one device. For an all-gather that is the gathered (full)
+shape; for an all-reduce / collective-permute the local shape; async
+``-start``/``-done`` pairs are counted once (at the start op).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, Tuple
+
+import jax
+
+COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1,
+                "f8e5m2": 1, "s64": 8, "u64": 8, "s32": 4, "u32": 4,
+                "s16": 2, "u16": 2, "s8": 1, "u8": 1, "pred": 1}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+# `%name = <shape> <op>` where <op> is a collective, optionally the async
+# `-start` form. The `-done` halves carry the same shape and are skipped so
+# async pairs are counted once.
+_OP_RE = re.compile(
+    r"(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(\([^)]*\)|\S+)\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(-start|-done)?\(")
+
+
+def shape_bytes(shape_str: str) -> int:
+    """Total bytes of an HLO shape string (tuples summed)."""
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(shape_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+@dataclasses.dataclass(frozen=True)
+class CommReport:
+    """Per-collective op counts and per-device byte totals of one program."""
+
+    counts: Dict[str, int]
+    bytes: Dict[str, int]
+
+    @property
+    def total_count(self) -> int:
+        return sum(self.counts.values())
+
+    @property
+    def total_bytes(self) -> int:
+        return sum(self.bytes.values())
+
+    def kinds(self) -> Tuple[str, ...]:
+        """Collective categories that actually appear, in canonical order."""
+        return tuple(k for k in COLLECTIVES if self.counts.get(k, 0) > 0)
+
+    def assert_no_collectives(self, what: str = "program") -> "CommReport":
+        """The paper's central invariant, as one assert."""
+        assert self.total_count == 0, (
+            f"{what} is NOT communication-free: "
+            f"{ {k: v for k, v in self.counts.items() if v} }")
+        return self
+
+    def __str__(self) -> str:
+        rows = [f"  {k:20s} count={self.counts[k]:4d} "
+                f"bytes={self.bytes[k]}" for k in COLLECTIVES
+                if self.counts.get(k, 0)]
+        return ("CommReport(no collectives)" if not rows
+                else "CommReport(\n" + "\n".join(rows) + "\n)")
+
+
+def parse_hlo(hlo_text: str) -> CommReport:
+    """Walk (compiled) HLO text; count collective ops and result bytes."""
+    counts = {k: 0 for k in COLLECTIVES}
+    byts = {k: 0 for k in COLLECTIVES}
+    for line in hlo_text.splitlines():
+        m = _OP_RE.match(line.strip())
+        if not m or m.group(3) == "-done":
+            continue
+        kind = m.group(2)
+        counts[kind] += 1
+        byts[kind] += shape_bytes(m.group(1))
+    return CommReport(counts=counts, bytes=byts)
+
+
+def comm_report(fn, *args, **kwargs) -> CommReport:
+    """Lower + compile ``fn(*args, **kwargs)`` and account its collectives.
+
+    ``fn`` may be a plain callable (it is ``jax.jit``-wrapped here) or an
+    already-jitted function; abstract ``ShapeDtypeStruct`` args work — the
+    program is never executed.
+    """
+    jitted = fn if hasattr(fn, "lower") else jax.jit(fn)
+    compiled = jitted.lower(*args, **kwargs).compile()
+    return parse_hlo(compiled.as_text())
+
+
+def assert_no_collectives(fn, *args, what: str = "program",
+                          **kwargs) -> CommReport:
+    """Compile and assert the program issues ZERO collectives."""
+    return comm_report(fn, *args, **kwargs).assert_no_collectives(what)

@@ -1,0 +1,216 @@
+"""Phase-level tracing: lightweight context-manager spans (Fig. 8 taxonomy).
+
+The paper's evidence is per-phase time breakdowns (Fig. 8: sampling / SpMM /
+GEMM / communication). :class:`Tracer` is the host-side half of producing
+them: named spans aggregate (count, total seconds, max) per phase path, with
+
+* **near-zero overhead when disabled** — ``span()`` returns ONE shared no-op
+  context manager (no allocation, no clock read), so instrumentation can stay
+  in hot paths unconditionally;
+* **thread safety** — the span stack is thread-local (each thread nests
+  independently: the async-checkpoint worker and the serving pump thread
+  record concurrently with the driver), aggregation is lock-protected;
+* **nesting** — a span opened inside another records under the joined path
+  (``"chunk/eval"``), so the summary keeps the call structure;
+* **jax.profiler passthrough** — ``trace_dir`` forwards to
+  ``jax.profiler.start_trace`` for device-level timelines; the
+  :func:`phase` annotation additionally wraps ``jax.named_scope`` so the
+  Fig. 8 phase names label the profiler trace and the HLO metadata.
+
+A span measures host wall time. Inside a ``jit`` trace that is *trace* time
+(the op runs later, on device) — the in-engine phase annotations therefore
+matter for the named_scope labels and the profiler, while wall-time spans
+belong at host boundaries (per-chunk, eval, checkpoint, sampling warm-up,
+serving), which is where the runtime places them.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from typing import Dict, Optional
+
+import jax
+
+# The paper's Fig. 8 phase taxonomy (plus the runtime's own phases). Spans
+# accept any name; these are the canonical ones the engine/runtime emit.
+PHASES = ("sample", "extract", "spmm", "gemm", "reshard", "tail", "rotate",
+          "eval", "ckpt", "chunk")
+
+
+class _NullSpan:
+    """The shared disabled-mode span: no state, no clock, no allocation."""
+
+    __slots__ = ()
+
+    def __enter__(self) -> "_NullSpan":
+        return self
+
+    def __exit__(self, *exc) -> bool:
+        return False
+
+
+NULL_SPAN = _NullSpan()
+
+
+class _Span:
+    __slots__ = ("_tracer", "_name", "_t0", "path", "seconds")
+
+    def __init__(self, tracer: "Tracer", name: str):
+        self._tracer = tracer
+        self._name = name
+        self.path = name
+        self.seconds = 0.0
+
+    def __enter__(self) -> "_Span":
+        stack = self._tracer._stack()
+        stack.append(self._name)
+        self.path = "/".join(stack)
+        self._t0 = time.perf_counter()
+        return self
+
+    def __exit__(self, *exc) -> bool:
+        self.seconds = time.perf_counter() - self._t0
+        self._tracer._stack().pop()
+        self._tracer._record(self.path, self.seconds)
+        return False
+
+
+class Tracer:
+    """Aggregating span recorder. ``span(name)`` is the only hot-path API."""
+
+    def __init__(self, enabled: bool = True,
+                 trace_dir: Optional[str] = None):
+        self.enabled = enabled
+        self.trace_dir = trace_dir
+        self._lock = threading.Lock()
+        self._local = threading.local()
+        # path -> [count, total_s, max_s]
+        self._stats: Dict[str, list] = {}
+        self._profiling = False
+
+    # -- spans ---------------------------------------------------------------
+
+    def span(self, name: str):
+        """Context manager timing one phase; the no-op singleton when
+        disabled."""
+        if not self.enabled:
+            return NULL_SPAN
+        return _Span(self, name)
+
+    def record(self, name: str, seconds: float) -> None:
+        """Record an externally-measured duration under ``name``."""
+        if self.enabled:
+            self._record(name, seconds)
+
+    def _stack(self) -> list:
+        st = getattr(self._local, "stack", None)
+        if st is None:
+            st = self._local.stack = []
+        return st
+
+    def _record(self, path: str, seconds: float) -> None:
+        with self._lock:
+            ent = self._stats.get(path)
+            if ent is None:
+                self._stats[path] = [1, seconds, seconds]
+            else:
+                ent[0] += 1
+                ent[1] += seconds
+                ent[2] = max(ent[2], seconds)
+
+    # -- reporting -----------------------------------------------------------
+
+    def summary(self) -> Dict[str, Dict[str, float]]:
+        """``{path: {count, total_s, mean_ms, max_ms}}`` for every span path
+        recorded so far."""
+        with self._lock:
+            return {
+                path: {
+                    "count": c,
+                    "total_s": tot,
+                    "mean_ms": tot / c * 1e3,
+                    "max_ms": mx * 1e3,
+                }
+                for path, (c, tot, mx) in sorted(self._stats.items())
+            }
+
+    def total(self, name: str) -> float:
+        """Total seconds across every path whose LEAF phase is ``name``
+        (``total("eval")`` includes ``"chunk/eval"``)."""
+        with self._lock:
+            return sum(tot for path, (_, tot, _) in self._stats.items()
+                       if path.rsplit("/", 1)[-1] == name)
+
+    def totals(self) -> Dict[str, float]:
+        """Leaf-phase totals (the Fig. 8 breakdown input)."""
+        out: Dict[str, float] = {}
+        with self._lock:
+            for path, (_, tot, _) in self._stats.items():
+                leaf = path.rsplit("/", 1)[-1]
+                out[leaf] = out.get(leaf, 0.0) + tot
+        return out
+
+    def reset(self) -> None:
+        with self._lock:
+            self._stats = {}
+
+    # -- jax.profiler passthrough -------------------------------------------
+
+    def start_profile(self) -> bool:
+        """Start a ``jax.profiler`` trace into ``trace_dir`` (no-op without
+        one). Returns whether a trace was started."""
+        if self.trace_dir is None or self._profiling:
+            return False
+        jax.profiler.start_trace(self.trace_dir)
+        self._profiling = True
+        return True
+
+    def stop_profile(self) -> None:
+        if self._profiling:
+            jax.profiler.stop_trace()
+            self._profiling = False
+
+
+# ---------------------------------------------------------------------------
+# The process-global tracer: instrumented library code (forward engine,
+# pipeline, minibatch extraction) reports here. Disabled by default — the
+# CLI / benchmarks enable it.
+# ---------------------------------------------------------------------------
+
+_GLOBAL = Tracer(enabled=False)
+
+
+def get_tracer() -> Tracer:
+    return _GLOBAL
+
+
+def set_tracer(tracer: Tracer) -> Tracer:
+    global _GLOBAL
+    _GLOBAL = tracer
+    return tracer
+
+
+class _PhaseCtx:
+    """``jax.named_scope(name)`` + a global-tracer span in one context: the
+    scope labels the HLO/profiler timeline (zero runtime cost — it exists at
+    trace time only), the span feeds the host-side summary."""
+
+    __slots__ = ("_ns", "_sp")
+
+    def __init__(self, name: str):
+        self._ns = jax.named_scope(name)
+        self._sp = _GLOBAL.span(name)
+
+    def __enter__(self):
+        self._ns.__enter__()
+        self._sp.__enter__()
+        return self
+
+    def __exit__(self, *exc) -> bool:
+        self._sp.__exit__(*exc)
+        return bool(self._ns.__exit__(*exc))
+
+
+def phase(name: str) -> _PhaseCtx:
+    """Annotate one Fig.-8 phase in library code (engine, sampling)."""
+    return _PhaseCtx(name)

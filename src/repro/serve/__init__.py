@@ -12,7 +12,7 @@ from repro.serve.assembler import (AssemblySpec, BatchPlan, ShardedBatchPlan,
                                    make_support_pools, plan_batch,
                                    plan_batch_ranges)
 from repro.serve.cache import EmbeddingCache
-from repro.serve.driver import ServingDriver
+from repro.serve.driver import Overloaded, ServingDriver
 from repro.serve.engine import InferenceEngine, ServeOptions
 
 __all__ = [
@@ -21,6 +21,6 @@ __all__ = [
     "assemble_dense_block", "make_builder", "make_spec",
     "make_support_pool", "make_support_pools", "plan_batch",
     "plan_batch_ranges",
-    "EmbeddingCache", "ServingDriver",
+    "EmbeddingCache", "Overloaded", "ServingDriver",
     "InferenceEngine", "ServeOptions",
 ]

@@ -33,6 +33,10 @@ from typing import Dict, Optional, Sequence, Tuple
 from repro.serve.engine import InferenceEngine
 
 
+class Overloaded(RuntimeError):
+    """Raised by ``submit`` when the in-flight cap sheds the request."""
+
+
 class ServingDriver:
     """Thread-safe front of one engine with its own pump loop.
 
@@ -43,17 +47,20 @@ class ServingDriver:
 
     def __init__(self, engine: InferenceEngine, *,
                  starvation_ms: float = 25.0, poll_ms: float = 1.0,
-                 auto: bool = True):
+                 auto: bool = True, max_inflight: int = 0):
         assert not engine.opts.replay, (
             "the driver uses real time; replay engines are driven directly")
         self._eng = engine
         self._starvation = starvation_ms / 1e3
         self._poll = poll_ms / 1e3
+        self._max_inflight = max_inflight   # 0 = unbounded (no shedding)
         self._lock = threading.Lock()
         self._futures: Dict[int, Tuple[Future, float]] = {}
         self._stop = threading.Event()
         self._wake = threading.Event()
         self.starvation_flushes = 0
+        self.shed = 0                 # requests refused at the admission gate
+        self.inflight_high_water = 0
         self.last_error: Optional[BaseException] = None
         self._thread: Optional[threading.Thread] = None
         if auto:
@@ -71,8 +78,18 @@ class ServingDriver:
             if self._stop.is_set():
                 raise RuntimeError("submit() after close(): nothing would "
                                    "ever flush this request")
+            if (self._max_inflight
+                    and len(self._futures) >= self._max_inflight):
+                # admission control: shedding here keeps the tail latency of
+                # admitted requests bounded instead of queueing unboundedly
+                self.shed += 1
+                raise Overloaded(
+                    f"{len(self._futures)} requests in flight "
+                    f"(max_inflight={self._max_inflight})")
             rid = self._eng.submit(vertices)
             self._futures[rid] = (fut, time.monotonic())
+            self.inflight_high_water = max(self.inflight_high_water,
+                                           len(self._futures))
             self._collect_locked()          # submit may complete inline
         self._wake.set()
         return fut
@@ -124,7 +141,9 @@ class ServingDriver:
         with self._lock:
             out = self._eng.stats()
             out["inflight"] = len(self._futures)
+            out["inflight_high_water"] = self.inflight_high_water
             out["starvation_flushes"] = self.starvation_flushes
+            out["shed"] = self.shed
         return out
 
     # -- internals ----------------------------------------------------------

@@ -31,6 +31,7 @@ import numpy as np
 
 from repro.core import gcn_model as M
 from repro.graphs.csr import CSRMatrix
+from repro.obs.metrics import LatencyHistogram
 from repro.serve import assembler as asm
 from repro.serve.batcher import MicroBatch, MicroBatcher
 from repro.serve.cache import EmbeddingCache
@@ -153,10 +154,15 @@ class InferenceEngine:
 
             self._fwd = jax.jit(fwd)
 
-        # counters
+        # counters. Latencies go into a bounded-memory streaming histogram
+        # (exact-merging log buckets) instead of an unbounded list — the
+        # engine is meant to survive millions of requests.
         self.completed = 0
         self.device_calls = 0
-        self.latencies: List[float] = []
+        self.latencies = LatencyHistogram()
+        self.queue_high_water = 0      # max items pending in the batcher
+        self._slots_filled = 0         # requested vertices actually batched
+        self._slots_total = 0          # slot capacity of every batch run
         self._t_first: Optional[float] = None
         self._t_last: Optional[float] = None
 
@@ -220,6 +226,8 @@ class InferenceEngine:
             batches += self._batcher.flush_all()
         else:
             batches = self._batcher.add(rid, miss_verts, now, miss_pos)
+        self.queue_high_water = max(self.queue_high_water,
+                                    self._batcher.pending)
         for b in batches:
             self._run_batch(b, now)
         return rid
@@ -337,6 +345,12 @@ class InferenceEngine:
         staged = []                             # (batch, rows, miss, plan)
         plans = []
         for batch in group:
+            # occupancy: distinct requested vertices vs the batch's static
+            # slot capacity — the complement is padding the device computes
+            # for nothing
+            self._slots_filled += min(len(set(batch.vertices)),
+                                      self.spec.slots)
+            self._slots_total += self.spec.slots
             rows, miss = self._miss_rows(batch)
             plan = None
             if miss.size:
@@ -370,7 +384,7 @@ class InferenceEngine:
 
     def _finish(self, rid: int, t_done: float) -> None:
         req = self._requests.pop(rid)
-        self.latencies.append(t_done - req.t_submit)
+        self.latencies.observe(t_done - req.t_submit)
         self.completed += 1
         self._t_last = t_done
         self._done[rid] = req.out
@@ -382,12 +396,15 @@ class InferenceEngine:
         Cache contents and pending requests are untouched."""
         self.completed = 0
         self.device_calls = 0
-        self.latencies = []
+        self.latencies = LatencyHistogram()
+        self.queue_high_water = 0
+        self._slots_filled = 0
+        self._slots_total = 0
         self._t_first = None
         self._t_last = None
 
     def stats(self) -> dict:
-        lat = np.asarray(self.latencies, np.float64)
+        lat = self.latencies.snapshot()
         span = ((self._t_last - self._t_first)
                 if (self._t_first is not None and self._t_last is not None)
                 else 0.0)
@@ -397,8 +414,17 @@ class InferenceEngine:
             "batches": self._batcher.batches_emitted,
             "pending": self._batcher.pending,
             "staged": len(self._staged),
-            "p50_ms": float(np.percentile(lat, 50) * 1e3) if lat.size else 0.0,
-            "p99_ms": float(np.percentile(lat, 99) * 1e3) if lat.size else 0.0,
+            "queue_high_water": self.queue_high_water,
+            # slot occupancy of the batches actually run; the complement is
+            # the device cycles spent on padding
+            "occupancy": (self._slots_filled / self._slots_total
+                          if self._slots_total else 0.0),
+            "padding_waste": (1.0 - self._slots_filled / self._slots_total
+                              if self._slots_total else 0.0),
+            "p50_ms": lat["p50_ms"],
+            "p95_ms": lat["p95_ms"],
+            "p99_ms": lat["p99_ms"],
+            "mean_ms": lat["mean_ms"],
             "req_per_s": self.completed / span if span > 0 else float("inf"),
         }
         if self._cache is not None:

@@ -52,6 +52,7 @@ from __future__ import annotations
 
 import dataclasses
 import threading
+import time
 from typing import Callable, List, Optional, Tuple
 
 import jax
@@ -62,6 +63,7 @@ from repro.checkpoint import (checkpoint_keys, checkpoint_path, latest_step,
                               load_checkpoint, save_checkpoint)
 from repro.core import fourd
 from repro.core import pipeline as PL
+from repro.obs.tracer import Tracer
 from repro.train.state import TrainState, init_train_state
 
 CKPT_NAME = "state"          # full-TrainState checkpoints (vs bare "ckpt")
@@ -113,6 +115,12 @@ class RunLog:
     evals: List[Tuple[int, float]] = dataclasses.field(default_factory=list)
     hit_target: bool = False
     final_ckpt: Optional[str] = None
+    # -- tracer-derived timing (per ``run()`` call) --------------------------
+    ms_per_step: float = 0.0     # train wall / steps, eval + blocking-ckpt
+                                 # time excluded
+    eval_s: float = 0.0          # total seconds spent in eval_fn
+    ckpt_overlap_s: float = 0.0  # async-ckpt worker seconds HIDDEN behind
+                                 # training (io time minus the join waits)
 
 
 class Trainer:
@@ -125,10 +133,15 @@ class Trainer:
 
     def __init__(self, plan: fourd.FourDPlan, optimizer,
                  loop: TrainLoopConfig, *,
-                 eval_fn: Optional[Callable] = None):
+                 eval_fn: Optional[Callable] = None,
+                 tracer: Optional[Tracer] = None):
         self.plan = plan
         self.optimizer = optimizer
         self.loop = loop
+        # phase spans at the host boundaries: chunk dispatch, eval, ckpt io
+        # and joins. Per-chunk overhead is one perf_counter pair — enabled
+        # by default; pass Tracer(enabled=False) to opt out entirely.
+        self.tracer = tracer if tracer is not None else Tracer(enabled=True)
         self.steps_per_epoch = plan.scfg.steps_per_epoch
         self.total_steps = (loop.total_steps if loop.total_steps is not None
                             else loop.epochs * self.steps_per_epoch)
@@ -176,16 +189,22 @@ class Trainer:
         # waits on the device between chunks, not even for a scalar
         step = int(state.step) if step is None else step
         if sync:
-            return save_checkpoint(directory, step, _device_get(state),
-                                   name=CKPT_NAME)
+            with self.tracer.span("ckpt"):     # blocks the driver thread
+                return save_checkpoint(directory, step, _device_get(state),
+                                       name=CKPT_NAME)
         snap = self._snapshot(state)
 
         def work():
+            t0 = time.perf_counter()
             try:
                 save_checkpoint(directory, step, _device_get(snap),
                                 name=CKPT_NAME)
             except BaseException as exc:       # surfaced at the next join
                 self._save_exc = exc
+            finally:
+                # worker io time; the part not later spent in "ckpt_wait"
+                # joins was hidden behind training (RunLog.ckpt_overlap_s)
+                self.tracer.record("ckpt_io", time.perf_counter() - t0)
 
         self._save_thread = threading.Thread(
             target=work, name="trainer-async-ckpt", daemon=True)
@@ -195,7 +214,8 @@ class Trainer:
     def join_saves(self) -> None:
         """Wait for the in-flight async save (if any); re-raise its error."""
         if self._save_thread is not None:
-            self._save_thread.join()
+            with self.tracer.span("ckpt_wait"):
+                self._save_thread.join()
             self._save_thread = None
         if self._save_exc is not None:
             exc, self._save_exc = self._save_exc, None
@@ -321,22 +341,29 @@ class Trainer:
         total = self.total_steps
         log = RunLog()
         done = int(state.step)
+        start_step = done
         # boundaries already behind a resumed state are not re-run
         eval_mark = done // loop.eval_every if loop.eval_every else 0
         ckpt_mark = done // loop.ckpt_every if loop.ckpt_every else 0
         saved_at = None         # step of the newest (possibly async) save
         device_losses = []      # per-chunk device arrays; materialized once
                                 # at the end so chunks keep dispatching async
+        tr = self.tracer
+        base = tr.totals()      # a shared tracer may carry earlier runs;
+                                # RunLog timing is the DELTA over this run
+        t_run0 = time.perf_counter()
 
         while done < total and not log.hit_target:
             n = min(loop.chunk_size, total - done)
-            state, losses = self.compiled_chunk(n)(state, graph)
+            with tr.span("chunk"):      # dispatch time (chunks run async)
+                state, losses = self.compiled_chunk(n)(state, graph)
             done += n
             device_losses.append(losses)
 
             if loop.eval_every and done // loop.eval_every > eval_mark:
                 eval_mark = done // loop.eval_every
-                acc = float(self.eval_fn(state.params, graph))   # ONCE
+                with tr.span("eval"):
+                    acc = float(self.eval_fn(state.params, graph))   # ONCE
                 log.evals.append((done, acc))
                 if report is not None:
                     report(done, float(losses[-1]), acc)
@@ -362,4 +389,23 @@ class Trainer:
 
         log.losses = [float(x) for arr in device_losses
                       for x in np.asarray(arr)]
+        # np.asarray above blocked on every chunk, so this wall time covers
+        # the full train compute; subtract what blocked the driver for
+        # other reasons (eval, sync-ckpt writes, async-ckpt joins) to get
+        # the per-step figure. The async worker's io time ("ckpt_io") runs
+        # on its own thread — whatever was NOT re-absorbed as a join wait
+        # was overlapped with training.
+        wall = time.perf_counter() - t_run0
+        tot = tr.totals()
+
+        def delta(name: str) -> float:
+            return tot.get(name, 0.0) - base.get(name, 0.0)
+
+        log.eval_s = delta("eval")
+        log.ckpt_overlap_s = max(
+            0.0, delta("ckpt_io") - delta("ckpt_wait"))
+        steps_run = done - start_step
+        if steps_run > 0:
+            blocked = log.eval_s + delta("ckpt") + delta("ckpt_wait")
+            log.ms_per_step = max(0.0, wall - blocked) * 1e3 / steps_run
         return state, log

@@ -17,7 +17,8 @@ import pytest
 
 from repro.core import gcn_model as M
 from repro.graphs import csr_to_dense, make_synthetic_dataset
-from repro.serve import InferenceEngine, ServeOptions, ServingDriver
+from repro.serve import (InferenceEngine, Overloaded, ServeOptions,
+                         ServingDriver)
 
 N = 96
 
@@ -201,6 +202,62 @@ def test_driver_rejects_replay_engines(served):
     with pytest.raises(AssertionError):
         ServingDriver(replay_eng)
     eng.drain()
+
+
+def test_stats_high_water_marks_and_latency_quantiles(served):
+    """Observability satellite: the structured stats() payload. Parking 5
+    one-vertex requests behind a long deadline must register exact
+    queue/inflight high-water marks; after the drain the latency histogram
+    covers every request with ordered quantiles, and batch occupancy +
+    padding waste partition the slot capacity."""
+    eng = _engine(served, max_delay_ms=10_000.0)
+    drv = ServingDriver(eng, starvation_ms=10_000.0, auto=False)
+    futs = [drv.submit([i]) for i in range(5)]          # 5 < slots: parked
+    st = drv.stats()
+    assert st["queue_high_water"] == 5
+    assert st["inflight_high_water"] == 5
+    assert st["inflight"] == 5 and st["shed"] == 0
+    drv.drain()
+    for f in futs:
+        assert f.done()
+    st = drv.stats()
+    assert st["completed"] == 5 and st["inflight"] == 0
+    # one flush of 5 distinct vertices into an 8-slot batch
+    assert st["queue_high_water"] == 5
+    assert st["occupancy"] == pytest.approx(5 / 8)
+    assert st["padding_waste"] == pytest.approx(3 / 8)
+    assert 0 < st["p50_ms"] <= st["p95_ms"] <= st["p99_ms"]
+    assert 0 < st["mean_ms"]
+    assert eng.latencies.count == 5
+    drv.close()
+
+
+def test_max_inflight_sheds_overloaded_requests(served):
+    """Admission control: beyond ``max_inflight`` parked requests, submit
+    raises ``Overloaded`` and counts the shed — while every ADMITTED request
+    still completes correctly after the overload clears."""
+    _, _, _, ref = served
+    eng = _engine(served, max_delay_ms=10_000.0)
+    drv = ServingDriver(eng, starvation_ms=10_000.0, auto=False,
+                        max_inflight=3)
+    futs = [drv.submit([i, i + 1]) for i in range(3)]
+    for k in range(2):
+        with pytest.raises(Overloaded, match="max_inflight=3"):
+            drv.submit([40 + k])
+    st = drv.stats()
+    assert st["shed"] == 2
+    assert st["inflight"] == st["inflight_high_water"] == 3
+    drv.drain()                            # clears the gate...
+    fut_late = drv.submit([50, 51])        # ...so new traffic is admitted
+    drv.drain()
+    for i, f in enumerate(futs):
+        np.testing.assert_allclose(f.result(timeout=5), ref[[i, i + 1]],
+                                   atol=1e-5)
+    np.testing.assert_allclose(fut_late.result(timeout=5), ref[[50, 51]],
+                               atol=1e-5)
+    assert drv.stats()["shed"] == 2        # shed requests never served
+    assert drv.stats()["completed"] == 4
+    drv.close()
 
 
 def test_manual_driver_pump_services_deadlines(served):

@@ -442,6 +442,68 @@ def test_cli_rejects_steps_with_epochs():
         cli.main(["--steps", "4", "--epochs", "1"])
 
 
+def test_runlog_tracer_timing_fields(setup, fresh_params, tmp_path):
+    """Observability satellite: a traced run populates the RunLog timing
+    fields from the tracer — ms_per_step excludes the eval/blocking-ckpt
+    time, eval_s covers the boundary evals, and the async checkpoint's io
+    time is recorded so the hidden fraction is derivable."""
+    from repro.obs import Tracer
+
+    plan, graph = setup[3], setup[4]
+    opt = AdamW(lr=5e-3)
+    tr = Tracer(enabled=True)
+    trainer = Trainer(plan, opt, TrainLoopConfig(
+        total_steps=STEPS, chunk_size=2, eval_every=3,
+        ckpt_dir=str(tmp_path), ckpt_every=3), tracer=tr)
+    _, log = trainer.run(trainer.init_state(fresh_params(), graph), graph)
+
+    assert log.ms_per_step > 0.0
+    assert log.eval_s > 0.0            # two boundary evals ran
+    assert log.ckpt_overlap_s >= 0.0
+    s = tr.summary()
+    assert s["chunk"]["count"] == STEPS // 2
+    assert s["eval"]["count"] == len(log.evals)
+    assert tr.total("ckpt_io") > 0.0   # the async worker reported its time
+
+    # a disabled tracer must not sabotage the run — timing fields just
+    # degrade (eval time can no longer be subtracted out)
+    off = Trainer(plan, opt, TrainLoopConfig(total_steps=STEPS,
+                                             chunk_size=2),
+                  tracer=Tracer(enabled=False))
+    _, log_off = off.run(off.init_state(fresh_params(), graph), graph)
+    assert log_off.ms_per_step > 0.0 and log_off.eval_s == 0.0
+
+
+def test_cli_metrics_json_dump(tmp_path, capsys):
+    """--metrics-json writes the scripted-run artifact: run config, the
+    full RunLog (losses + tracer-derived timing), and the span summary."""
+    import json
+
+    from repro.launch import train as cli
+    from repro.obs import Tracer, get_tracer, set_tracer
+
+    path = tmp_path / "metrics.json"
+    prev = get_tracer()
+    try:
+        cli.main(["--dataset", "ogbn-products", "--vertices", "256",
+                  "--gd", "1", "--g", "1", "--batch", "64",
+                  "--d-hidden", "32", "--layers", "2", "--steps", "4",
+                  "--chunk-size", "2", "--eval-every", "2",
+                  "--metrics-json", str(path)])
+    finally:
+        set_tracer(prev)               # the CLI enables the global tracer
+    doc = json.loads(path.read_text())
+    assert doc["run"]["steps"] == 4 and doc["run"]["batch"] == 64
+    assert 0.0 <= doc["run"]["final_acc"] <= 1.0
+    assert len(doc["runlog"]["losses"]) == 4
+    assert doc["runlog"]["ms_per_step"] > 0.0
+    assert doc["runlog"]["eval_s"] > 0.0
+    assert doc["spans"]["chunk"]["count"] == 2
+    assert "eval" in doc["spans"]
+    out = capsys.readouterr().out
+    assert "ms/step" in out and f"metrics: {path}" in out
+
+
 def test_restore_plain_from_prefetch_ckpt_drops_carry(setup, fresh_params,
                                                       tmp_path):
     """The reverse direction: the saved carry is redundant (a pure function
