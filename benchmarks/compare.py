@@ -24,6 +24,32 @@ from repro.obs.bench import compare_entries, load_bench  # noqa: E402
 BASELINE_DIR = os.path.join(os.path.dirname(os.path.abspath(__file__)),
                             "baseline")
 
+PHASES = ("spmm", "gemm", "reshard", "rotate")
+
+
+def print_phase_table(bench: dict) -> None:
+    """The per-phase overlap delta table (fig8's isolated phase rows):
+    none vs ring wall µs and collective bytes, per engine phase. Printed
+    for information only — the structural overlap gate is the
+    ``obs.overlap_report`` assertion in the tests, never a CPU timing."""
+    ent = {e["name"]: e for e in bench.get("entries", [])}
+
+    def row(ph, tag):
+        return next((e for n, e in ent.items()
+                     if n.endswith(f"phase_{ph}_{tag}")), None)
+
+    pairs = [(ph, row(ph, "none"), row(ph, "ring")) for ph in PHASES]
+    pairs = [(ph, a, b) for ph, a, b in pairs if a and b]
+    if not pairs:
+        return
+    print(f"\n-- {bench['name']}: per-phase overlap delta (none -> ring)")
+    print(f"   {'phase':10s} {'none_us':>10s} {'ring_us':>10s} "
+          f"{'none_bytes':>12s} {'ring_bytes':>12s}")
+    for ph, a, b in pairs:
+        print(f"   {ph:10s} {a['median_us']:10.1f} {b['median_us']:10.1f} "
+              f"{a.get('comm_bytes') or 0:12d} "
+              f"{b.get('comm_bytes') or 0:12d}")
+
 
 def main() -> None:
     ap = argparse.ArgumentParser()
@@ -51,6 +77,7 @@ def main() -> None:
     for cur_path in current_files:
         base_path = os.path.join(baseline_dir, os.path.basename(cur_path))
         cur = load_bench(cur_path)
+        print_phase_table(cur)
         if not os.path.exists(base_path):
             print(f"[new] {cur['name']}: no committed baseline "
                   f"({len(cur.get('entries', []))} entries)")

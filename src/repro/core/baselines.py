@@ -20,7 +20,7 @@ from typing import NamedTuple, Optional, Sequence, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.core.minibatch import BlockFormat, MinibatchBuilder
+from repro.core.minibatch import BlockFormat, GraphShards, MinibatchBuilder
 from repro.core.sampling import SampleConfig
 
 
@@ -160,3 +160,73 @@ def sage_aggregate(h_next: jax.Array, neighbor_map: jax.Array) -> jax.Array:
     h_self = h_next[:n_inner]                        # (|F_l|, d)
     nbr_mean = h_next[neighbor_map].mean(axis=1)     # (|F_l|, d)
     return (h_self + k * nbr_mean) / (k + 1.0)
+
+
+# ---------------------------------------------------------------------------
+# Full-batch GCN (the no-sampling baseline)
+# ---------------------------------------------------------------------------
+#
+# The classic full-graph training regime every sampling paper compares
+# against: one forward/backward over ALL vertices per optimizer step. It
+# runs through the SAME ``ForwardEngine`` as the paper's path — the "csr"
+# aggregation backend over the partitioner's adjacency shards, exactly the
+# program ``fourd.make_eval_step`` uses for full-graph evaluation — so the
+# fig5/fig8 comparison isolates mini-batching itself (identical kernels,
+# collectives, and precision knobs on both sides).
+
+def make_fullbatch_gcn_loss(plan, *, train: bool = True):
+    """loss(params, graph, step) -> (G_d,) per-group losses for one
+    full-graph GCN step on a ``fourd.FourDPlan``.
+
+    No sampling, no extraction: the engine consumes the resident CSR
+    adjacency shards directly (``backend="csr"``). ``jax.grad`` composes
+    from outside exactly as with ``fourd.make_loss_fn``.
+    """
+    from jax.sharding import PartitionSpec as P
+
+    from repro.core import pmm3d
+    from repro.core.compat import shard_map
+
+    cfg = plan.cfg
+    engine = plan.engine(backend="csr", csr_rows=plan.scfg.n_local)
+
+    def local_loss(params, shards, feats, labels, step):
+        shards = shards.squeeze_blocks()
+        planes = tuple(shards.plane(li)
+                       for li in range(min(3, cfg.num_layers)))
+        logits, st = engine(params, planes, feats, step=step, train=train)
+        nll_sum, cnt = pmm3d.parallel_cross_entropy(
+            logits, labels, class_axis=st.rep, row_axis=st.row,
+            n_classes=cfg.num_classes)
+        return (nll_sum / jnp.maximum(cnt, 1.0))[None]
+
+    in_specs = (
+        plan.p_specs,
+        plan.shards_specs,
+        plan.data_specs["features"], plan.label_sp, P(),
+    )
+    sharded = shard_map(local_loss, mesh=plan.mesh, in_specs=in_specs,
+                        out_specs=P("d"), check_vma=False)
+
+    def loss_fn(params, graph, step):
+        return sharded(params, GraphShards.from_graph(graph),
+                       graph["features"], graph["labels"], step)
+    return loss_fn
+
+
+def make_fullbatch_gcn_step(plan, optimizer):
+    """(params, opt_state, graph, step) -> (params, opt_state, loss):
+    the jitted full-batch training step (mirrors ``fourd.make_train_step``
+    with the full-graph loss)."""
+    loss_fn = make_fullbatch_gcn_loss(plan, train=True)
+
+    def mean_loss(params, graph, step):
+        return loss_fn(params, graph, step).mean()
+
+    @jax.jit
+    def train_step(params, opt_state, graph, step):
+        loss, grads = jax.value_and_grad(mean_loss)(params, graph, step)
+        params, opt_state = optimizer.update(params, grads, opt_state)
+        return params, opt_state, loss
+
+    return train_step

@@ -48,6 +48,7 @@ from repro.kernels import ops as kops
 from repro.obs.tracer import phase
 
 BACKENDS = ("dense", "ell", "csr")
+OVERLAPS = ("none", "ring")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -79,6 +80,13 @@ class TrainOptions:
     # triples through HBM) or "pallas" (kernels/extract_gather.py — Alg. 2
     # phases 2-4 fused in one kernel).
     extract_impl: str = "jax"          # "jax" | "pallas"
+    # Comm–compute overlap (§V / ROADMAP item 4): "ring" decomposes the PMM
+    # all-reduces into chunked ppermute rings and software-pipelines the
+    # layer body (residual reshard issued first, reduced SpMM chunks GEMMed
+    # on arrival) so each transfer step hides behind a chunk of compute.
+    # Bit-identical to "none" at grid sides <= 2 (single-add reductions);
+    # the FP32 loss/norm reductions stay monolithic either way.
+    overlap_impl: str = "none"         # "none" | "ring"
 
 
 def _dropout_key(opts: TrainOptions, step: jax.Array, layer: int,
@@ -124,6 +132,7 @@ class ForwardEngine:
 
     def __post_init__(self):
         assert self.backend in BACKENDS, self.backend
+        assert self.opts.overlap_impl in OVERLAPS, self.opts.overlap_impl
         if self.backend == "csr":
             assert self.csr_rows > 0, (
                 "backend 'csr' needs the static local row count (csr_rows)")
@@ -142,19 +151,28 @@ class ForwardEngine:
 
     # -- the three aggregation backends (one layer's A @ H + psum) -----------
 
+    def aggregate_local(self, blk: Any, h: jax.Array) -> jax.Array:
+        """The backend-dispatched LOCAL A @ H partial product — before the
+        row-axis all-reduce, so both the monolithic and the chunked-ring
+        reduction paths consume the same partial."""
+        if self.backend == "ell":                 # block-ELL (tiles, colidx)
+            return kops.spmm_ell(blk[0], blk[1], h)
+        if self.backend == "csr":                 # padded-CSR (rp, ci, val)
+            rp, ci, val = blk
+            return pmm3d.csr_spmm_local(rp, ci, val, h, self.csr_rows)
+        return blk @ h
+
     def aggregate(self, blk: Any, h: jax.Array,
                   st: pmm3d.PlaneState) -> jax.Array:
         """SpMM (Eq. 5 / 27): A (p, r) @ H (r, c) -> psum r -> (p, c)."""
-        bf16 = self.opts.bf16_collectives
-        if self.backend == "ell":                 # block-ELL (tiles, colidx)
-            return pmm3d.psum_maybe_bf16(
-                kops.spmm_ell(blk[0], blk[1], h), st.row, bf16)
-        if self.backend == "csr":                 # padded-CSR (rp, ci, val)
-            rp, ci, val = blk
-            return pmm3d.psum_maybe_bf16(
-                pmm3d.csr_spmm_local(rp, ci, val, h, self.csr_rows),
-                st.row, bf16)
-        return pmm3d.pmm_matmul(blk, h, st.row, bf16=bf16)
+        return self._allreduce(self.aggregate_local(blk, h), st.row)
+
+    def _allreduce(self, x: jax.Array, axis: str) -> jax.Array:
+        """The PMM all-reduce under the overlap knob: one monolithic
+        ``psum`` ("none") or the chunked ppermute ring ("ring")."""
+        if self.opts.overlap_impl == "ring":
+            return pmm3d.ring_psum(x, axis, bf16=self.opts.bf16_collectives)
+        return pmm3d.psum_maybe_bf16(x, axis, self.opts.bf16_collectives)
 
     # -- the elementwise tail (Eqs. 7-10), reference or fused §V-C -----------
 
@@ -221,29 +239,49 @@ class ForwardEngine:
         Returns logits on plane (r_L, p_L) and the final PlaneState.
         """
         cfg, opts = self.cfg, self.opts
-        bf16 = opts.bf16_collectives
+        ring = opts.overlap_impl == "ring"
         st = pmm3d.initial_state()
 
         # input projection (Eq. 4): IN (x, z) @ W_in (z, y) -> psum z ->
         # F (x, y)
-        h = pmm3d.pmm_matmul(x_local, params["w_in"], "z", bf16=bf16)
+        h = self._allreduce(x_local @ params["w_in"], "z")
 
         # Fig. 8 phase annotations: jax.named_scope labels land in the HLO
         # metadata / profiler timeline; under jit the host spans measure
         # trace time only (wall-time spans live at the host boundaries in
         # the Trainer and serving driver).
+        #
+        # Software-pipelined schedule (overlap_impl="ring"): the residual
+        # reshard is issued FIRST — it depends only on h, so each of its
+        # ring steps is concurrency-eligible against the entire SpMM/GEMM
+        # chain; the SpMM all-reduce is a chunked ring whose reduced chunks
+        # are GEMMed on arrival (chunk c's matmul hides chunk c+1's
+        # ppermute). The whole body is plain lax ops, so it stays
+        # lax.scan-compatible inside the Trainer's chunked step loop.
+        # obs.overlap_report asserts the interleaving structurally on the
+        # compiled HLO.
         for li, layer in enumerate(params["layers"]):
-            with phase("spmm"):
-                agg = self.aggregate(adj_blocks[li % len(adj_blocks)], h, st)
-            # GEMM (Eq. 6 / 28): H (p, c) @ W (c, r) -> psum c -> conv (p, r)
-            with phase("gemm"):
-                conv = pmm3d.pmm_matmul(agg, layer["w"], st.col, bf16=bf16)
+            blk = adj_blocks[li % len(adj_blocks)]
             # residual must move (r, c) -> (p, r) (paper §IV-C4)
             res = None
             if cfg.use_residual:
                 with phase("reshard"):
                     res = pmm3d.reshard(h, st, (st.rep, st.row),
-                                        impl=opts.reshard_impl)
+                                        impl=opts.reshard_impl,
+                                        overlap=opts.overlap_impl)
+            with phase("spmm"):
+                part = self.aggregate_local(blk, h)
+                if not ring:
+                    part = self._allreduce(part, st.row)
+            # GEMM (Eq. 6 / 28): H (p, c) @ W (c, r) -> psum c -> conv (p, r)
+            with phase("gemm"):
+                if ring:
+                    conv = self._allreduce(
+                        pmm3d.ring_psum_gemm(part, layer["w"], st.row,
+                                             bf16=opts.bf16_collectives),
+                        st.col)
+                else:
+                    conv = self._allreduce(part @ layer["w"], st.col)
             dk = (_dropout_key(opts, step, li, st.rep, st.row, self.dp_axis)
                   if train and opts.dropout > 0 else None)
             with phase("tail"):
@@ -253,5 +291,5 @@ class ForwardEngine:
 
         # output head (Eq. 11): X (r, c) @ W_out (c, p) -> psum c ->
         # logits (r, p) rep c
-        logits = pmm3d.pmm_matmul(h, params["w_out"], st.col, bf16=bf16)
+        logits = self._allreduce(h @ params["w_out"], st.col)
         return logits, st

@@ -233,9 +233,205 @@ def reshard_permute(t: jax.Array, from_state: PlaneState,
 
 
 def reshard(t: jax.Array, from_state: PlaneState, to_plane: Tuple[str, str],
-            impl: str = "gather") -> jax.Array:
+            impl: str = "gather", overlap: str = "none") -> jax.Array:
     if (from_state.row, from_state.col) == to_plane:
         return t
     if impl == "permute":
         return reshard_permute(t, from_state, to_plane)
+    if overlap == "ring":
+        return reshard_gather_ring(t, from_state, to_plane)
     return reshard_gather(t, from_state, to_plane)
+
+
+def reshard_gather_ring(t: jax.Array, from_state: PlaneState,
+                        to_plane: Tuple[str, str]) -> jax.Array:
+    """``reshard_gather`` with both all-gathers decomposed into per-chunk
+    ``ppermute`` rings (``ring_all_gather``). Pure data movement — bitwise
+    identical to the monolithic form at every grid shape — but each of the
+    2(g-1) steps is an independently schedulable op the latency-hiding
+    scheduler can hide behind unrelated compute (the SpMM/GEMM chain the
+    pipelined ``ForwardEngine`` issues alongside)."""
+    full = ring_all_gather(t, from_state.row, axis=0)
+    full = ring_all_gather(full, from_state.col, axis=1)
+    br, bc = t.shape
+    i = jax.lax.axis_index(to_plane[0])
+    j = jax.lax.axis_index(to_plane[1])
+    return jax.lax.dynamic_slice(full, (i * br, j * bc), (br, bc))
+
+
+# ---------------------------------------------------------------------------
+# Chunked ring collectives (comm–compute overlap, paper §V / ROADMAP item 4)
+# ---------------------------------------------------------------------------
+#
+# The monolithic ``psum`` / ``all_gather`` forms above compile to ONE
+# collective op each, which serializes against the matmul consuming its
+# result. The ring forms below decompose the same movement into per-chunk
+# ``ppermute`` steps (the classic reduce-scatter + all-gather ring), so
+#
+#   * each step is an independently schedulable HLO op — the XLA
+#     latency-hiding scheduler (``launch/xla_flags.py``) can start step
+#     s+1's transfer while step s's chunk is being consumed, and
+#   * ``ring_psum_chunked`` lets the caller CONSUME each reduced chunk the
+#     moment it lands (``on_chunk``), so chunk c's GEMM hides chunk c+1's
+#     transfer — the software pipeline ``ForwardEngine`` builds per layer.
+#
+# Bytes-on-wire do not inflate: an all-reduce ring moves 2(g-1)/g of the
+# tensor per device (== the monolithic volume at g=2, strictly less than
+# the g*N all-gather accounting convention of ``obs.hlo``).
+#
+# Numerics: at g <= 2 every chunk reduction is a single IEEE add, so
+# ``ring_psum`` is BITWISE equal to ``jax.lax.psum`` (asserted by tier-1
+# and the (2,2,2)x2 multidevice tests); at larger g the ring fixes a
+# different association order than XLA's all-reduce, so equality is only
+# up to float associativity. ``ring_all_gather`` is pure data movement —
+# bitwise at every g.
+
+
+def _chunk_rows(x: jax.Array, g: int) -> Tuple[jax.Array, int]:
+    """Pad axis 0 to a multiple of g and view as (g, rows/g, ...) chunks."""
+    m = x.shape[0]
+    pad = (-m) % g
+    if pad:
+        x = jnp.pad(x, [(0, pad)] + [(0, 0)] * (x.ndim - 1))
+    return x.reshape((g, (m + pad) // g) + x.shape[1:]), pad
+
+
+def _ring_reduce_scatter(chunks: jax.Array, axis_name: str) -> jax.Array:
+    """g-1 ppermute steps; afterwards this device's chunk (idx+1)%g of the
+    (g, ...) stack holds the complete sum. Runs inside shard_map."""
+    from repro.core.compat import axis_size
+    g = axis_size(axis_name)
+    idx = jax.lax.axis_index(axis_name)
+    fwd = [(i, (i + 1) % g) for i in range(g)]
+    acc = chunks
+    with jax.named_scope("ring_rs"):
+        for s in range(g - 1):
+            send_ix = (idx - s) % g
+            send = jax.lax.dynamic_index_in_dim(acc, send_ix, 0,
+                                                keepdims=False)
+            recv = jax.lax.ppermute(send, axis_name, fwd)
+            recv_ix = (idx - 1 - s) % g
+            upd = jax.lax.dynamic_index_in_dim(acc, recv_ix, 0,
+                                               keepdims=False) + recv
+            acc = jax.lax.dynamic_update_index_in_dim(acc, upd, recv_ix, 0)
+    return acc
+
+
+def ring_psum(x: jax.Array, axis_name: str, *, bf16: bool = False
+              ) -> jax.Array:
+    """All-reduce over ``axis_name`` decomposed into a reduce-scatter +
+    all-gather ring of per-chunk ``ppermute`` steps (chunked along axis 0).
+
+    Matches ``psum_maybe_bf16`` semantics: with ``bf16`` the wire dtype is
+    bfloat16 (cast once before the ring, accumulate in bf16, cast back) —
+    including the lossy round-trip at g == 1, so the two impls stay
+    bit-comparable at every grid shape."""
+    return ring_psum_chunked(x, axis_name, lambda c: c, bf16=bf16)
+
+
+def ring_psum_chunked(x: jax.Array, axis_name: str, on_chunk, *,
+                      bf16: bool = False) -> jax.Array:
+    """``ring_psum`` that hands each fully-reduced chunk to ``on_chunk`` the
+    moment it arrives, concatenating the per-chunk results along axis 0.
+
+    ``on_chunk`` must be row-local and row-preserving (chunk rows in, the
+    same number of output rows out — e.g. ``lambda c: c @ w``; a pytree of
+    such outputs is fine): then the result equals
+    ``on_chunk(psum(x, axis_name))`` while chunk c's compute overlaps chunk
+    c+1's ``ppermute`` (the transfers form a serial chain; each ``on_chunk``
+    branches OFF the chain, so the scheduler may run it concurrently —
+    ``obs.overlap_report`` asserts this structurally on the compiled HLO).
+    Row-chunked matmuls are bitwise equal to the full-width form, so the
+    pipelined result stays bit-identical to the monolithic path."""
+    from repro.core.compat import axis_size
+    g = axis_size(axis_name)
+    dtype = x.dtype
+    wire = x.astype(jnp.bfloat16) if (bf16 and dtype == jnp.float32) else x
+    if g == 1:
+        return on_chunk(wire.astype(dtype))
+
+    chunks, pad = _chunk_rows(wire, g)
+    acc = _ring_reduce_scatter(chunks, axis_name)
+
+    idx = jax.lax.axis_index(axis_name)
+    fwd = [(i, (i + 1) % g) for i in range(g)]
+    per = chunks.shape[1]
+
+    def place(buf, y, ix):
+        return jax.tree.map(
+            lambda b, a: jax.lax.dynamic_update_index_in_dim(b, a, ix, 0),
+            buf, y)
+
+    # all-gather phase: circulate the complete chunks; consume on arrival
+    own_ix = (idx + 1) % g
+    cur = jax.lax.dynamic_index_in_dim(acc, own_ix, 0, keepdims=False)
+    y = on_chunk(cur.astype(dtype))
+    assert all(a.shape[0] == per for a in jax.tree.leaves(y)), (
+        "on_chunk must preserve the chunk row count")
+    out = place(jax.tree.map(
+        lambda a: jnp.zeros((g,) + a.shape, a.dtype), y), y, own_ix)
+    with jax.named_scope("ring_ag"):
+        for s in range(g - 1):
+            cur = jax.lax.ppermute(cur, axis_name, fwd)
+            out = place(out, on_chunk(cur.astype(dtype)), (idx - s) % g)
+    rows = x.shape[0]
+    return jax.tree.map(
+        lambda a: a.reshape((g * per,) + a.shape[2:])[:rows], out)
+
+
+def ring_psum_gemm(part: jax.Array, w: jax.Array, row_axis: str, *,
+                   bf16: bool = False) -> jax.Array:
+    """The pipelined SpMM-reduce + GEMM: ``psum(part, row_axis) @ w`` with
+    the all-reduce decomposed into the chunked ring and each reduced chunk
+    GEMMed on arrival (``ring_psum_chunked``), so every all-gather-phase
+    ``ppermute`` hides behind one chunk's matmul.
+
+    Gradients go through a custom VJP that reassembles the reduced sum in
+    the forward (an extra cheap buffer; bitwise equal to the monolithic
+    psum result at g <= 2) and uses FULL-WIDTH contractions in the
+    backward — the naive transpose would split the weight-gradient
+    reduction across chunks (``sum_c chunk_c^T @ dy_c``), reassociating
+    floats; with the hand-written backward both loss AND grads stay
+    bit-identical to the monolithic path, and the transpose all-reduce is
+    itself a ring (the backward pipeline overlaps too)."""
+
+    @jax.custom_vjp
+    def f(p_, w_):
+        return ring_psum_chunked(p_, row_axis, lambda c: c @ w_,
+                                 bf16=bf16)
+
+    def f_fwd(p_, w_):
+        agg, conv = ring_psum_chunked(
+            p_, row_axis, lambda c: (c, c @ w_), bf16=bf16)
+        return conv, (agg, w_)
+
+    def f_bwd(res, dconv):
+        agg, w_ = res
+        dagg = dconv @ w_.T                      # full-width, matches mono
+        dw = agg.T @ dconv                       # full-width, matches mono
+        dpart = ring_psum(dagg, row_axis, bf16=bf16)  # psum transpose
+        return dpart, dw
+
+    f.defvjp(f_fwd, f_bwd)
+    return f(part, w)
+
+
+def ring_all_gather(x: jax.Array, axis_name: str, *, axis: int = 0
+                    ) -> jax.Array:
+    """Tiled all-gather over ``axis_name`` decomposed into g-1 ``ppermute``
+    steps (bitwise identical to ``jax.lax.all_gather(..., tiled=True)``)."""
+    from repro.core.compat import axis_size
+    g = axis_size(axis_name)
+    if g == 1:
+        return x
+    idx = jax.lax.axis_index(axis_name)
+    fwd = [(i, (i + 1) % g) for i in range(g)]
+    out = jnp.zeros((g,) + x.shape, x.dtype)
+    out = jax.lax.dynamic_update_index_in_dim(out, x, idx, 0)
+    cur = x
+    with jax.named_scope("ring_ag"):
+        for s in range(g - 1):
+            cur = jax.lax.ppermute(cur, axis_name, fwd)
+            out = jax.lax.dynamic_update_index_in_dim(
+                out, cur, (idx - 1 - s) % g, 0)
+    return jnp.concatenate([out[k] for k in range(g)], axis=axis)

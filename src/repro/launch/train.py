@@ -30,7 +30,7 @@ import jax
 from repro.core import fourd, gcn_model as GM
 from repro.graphs import build_partitioned_graph, get_dataset
 from repro.obs import Tracer, set_tracer
-from repro.optim import AdamW, linear_warmup_cosine
+from repro.optim import AdamW, linear_warmup_cosine, linear_warmup_cosine_epochs
 from repro.train import Trainer, TrainLoopConfig
 
 
@@ -61,6 +61,14 @@ def build_argparser() -> argparse.ArgumentParser:
     ap.add_argument("--fused-elementwise", action="store_true")
     ap.add_argument("--reshard", default="gather",
                     choices=["gather", "permute"])
+    ap.add_argument("--overlap", default="none", choices=["none", "ring"],
+                    help="collective implementation in the forward engine: "
+                         "'ring' decomposes the PMM psums/gathers into "
+                         "per-chunk ppermute steps so each transfer hides "
+                         "behind a chunk of SpMM/GEMM compute")
+    ap.add_argument("--xla-overlap", action="store_true",
+                    help="enable XLA's latency-hiding scheduler flags "
+                         "before backend init (see launch/xla_flags.py)")
     ap.add_argument("--prefetch", action="store_true",
                     help="overlap sampling with training (paper §V-A)")
     ap.add_argument("--chunk-size", type=int, default=8,
@@ -93,6 +101,12 @@ def main(argv=None):
     if args.epochs is None and args.steps is None:
         args.steps = 300
 
+    if args.xla_overlap:
+        # must precede the first device use: XLA reads XLA_FLAGS once.
+        # "all" because asking the platform would itself init the backend
+        from repro.launch.xla_flags import enable_overlap_scheduler
+        enable_overlap_scheduler("all")
+
     n_need = args.gd * args.g ** 3
     assert len(jax.devices()) >= n_need, (
         f"need {n_need} devices; set XLA_FLAGS="
@@ -109,15 +123,23 @@ def main(argv=None):
     opts = fourd.TrainOptions(
         bf16_collectives=args.bf16_collectives,
         fused_elementwise=args.fused_elementwise,
-        reshard_impl=args.reshard, dropout=args.dropout, seed=args.seed,
+        reshard_impl=args.reshard, overlap_impl=args.overlap,
+        dropout=args.dropout, seed=args.seed,
         sample_mode=args.sample_mode)
     plan = fourd.build_plan(pg, cfg, mesh, batch=args.batch, opts=opts)
 
     graph = plan.shard_graph(pg)
-    total_steps = (args.steps if args.epochs is None
-                   else args.epochs * plan.scfg.steps_per_epoch)
-    opt = AdamW(lr=linear_warmup_cosine(args.lr, 20, total_steps),
-                weight_decay=1e-4, grad_clip=1.0)
+    if args.epochs is not None:
+        # epoch-parameterized: warmup/decay track the dataset's epoch
+        # length, not a step count that shifts with batch size
+        total_steps = args.epochs * plan.scfg.steps_per_epoch
+        lr = linear_warmup_cosine_epochs(
+            args.lr, warmup_epochs=min(1.0, 20 / plan.scfg.steps_per_epoch),
+            epochs=args.epochs, steps_per_epoch=plan.scfg.steps_per_epoch)
+    else:
+        total_steps = args.steps
+        lr = linear_warmup_cosine(args.lr, 20, total_steps)
+    opt = AdamW(lr=lr, weight_decay=1e-4, grad_clip=1.0)
     loop = TrainLoopConfig(
         total_steps=None if args.epochs is not None else args.steps,
         epochs=args.epochs, chunk_size=args.chunk_size,

@@ -1,0 +1,69 @@
+"""XLA latency-hiding scheduler flags for comm–compute overlap.
+
+The chunked-ring collectives (``pmm3d.ring_psum`` /
+``TrainOptions.overlap_impl="ring"``) expose per-chunk compute that is
+dependence-independent of each in-flight ``ppermute`` — but whether the
+backend actually interleaves them is the scheduler's call. These flags
+ask XLA to prioritize exactly that:
+
+* GPU: ``--xla_gpu_enable_latency_hiding_scheduler`` reorders the
+  instruction stream so async collective ``-start``/``-done`` pairs
+  straddle independent compute; ``--xla_gpu_enable_highest_priority_async_stream``
+  gives the collective stream priority so the NIC is never idle behind
+  kernels.
+* CPU (host meshes, CI): ``--xla_cpu_enable_concurrency_optimized_scheduler``
+  is the only scheduler lever — host collectives are synchronous, so the
+  structural gate lives in ``obs.overlap_report`` (dependence-graph
+  ``concurrent`` scores) rather than in -start/-done separation.
+
+``enable_overlap_scheduler()`` must run BEFORE the first device use:
+XLA reads ``XLA_FLAGS`` at backend initialization and never again.
+"""
+from __future__ import annotations
+
+import os
+
+GPU_OVERLAP_FLAGS = (
+    "--xla_gpu_enable_latency_hiding_scheduler=true",
+    "--xla_gpu_enable_highest_priority_async_stream=true",
+)
+
+CPU_OVERLAP_FLAGS = (
+    "--xla_cpu_enable_concurrency_optimized_scheduler=true",
+)
+
+
+def overlap_flags(platform: str = "cpu") -> tuple:
+    """The latency-hiding flag set for ``platform``.
+
+    "cpu" / "gpu" select one backend's set; "all" returns both — the
+    ``DebugOptions`` flag registry is shared across backends, so a
+    CPU-only jaxlib still parses (and ignores) the ``xla_gpu_*`` flags.
+    Use "all" when the platform can't be asked without initializing the
+    backend first (the exact situation these flags must precede).
+    """
+    if platform == "all":
+        return GPU_OVERLAP_FLAGS + CPU_OVERLAP_FLAGS
+    return GPU_OVERLAP_FLAGS if platform == "gpu" else CPU_OVERLAP_FLAGS
+
+
+def enable_overlap_scheduler(platform: str = "cpu") -> str:
+    """Prepend the overlap scheduler flags to ``XLA_FLAGS`` (idempotent).
+
+    Returns the resulting ``XLA_FLAGS`` value. A no-op for flags already
+    present, so repeated calls (or user-set flags) are safe; raises if the
+    JAX backend was already initialized — the flags would silently not
+    apply, which is worse than failing.
+    """
+    import jax._src.xla_bridge as xb  # local: only for the liveness check
+    if getattr(xb, "_backends", None):
+        raise RuntimeError(
+            "enable_overlap_scheduler() after JAX backend init: XLA_FLAGS "
+            "is read once at backend creation — call this before the "
+            "first jax.devices()/jit use")
+    cur = os.environ.get("XLA_FLAGS", "")
+    missing = [f for f in overlap_flags(platform) if f.split("=")[0] not in cur]
+    if missing:
+        cur = " ".join(missing + ([cur] if cur else []))
+        os.environ["XLA_FLAGS"] = cur
+    return os.environ.get("XLA_FLAGS", "")

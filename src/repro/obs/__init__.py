@@ -14,10 +14,14 @@ from repro.obs.bench import (  # noqa: F401
 )
 from repro.obs.hlo import (  # noqa: F401
     COLLECTIVES,
+    CollectiveSite,
     CommReport,
+    OverlapReport,
     assert_no_collectives,
     comm_report,
+    overlap_report,
     parse_hlo,
+    parse_overlap,
     shape_bytes,
 )
 from repro.obs.metrics import LatencyHistogram  # noqa: F401

@@ -18,7 +18,7 @@ from __future__ import annotations
 
 import dataclasses
 import re
-from typing import Dict, Tuple
+from typing import Dict, List, Tuple
 
 import jax
 
@@ -118,3 +118,182 @@ def assert_no_collectives(fn, *args, what: str = "program",
                           **kwargs) -> CommReport:
     """Compile and assert the program issues ZERO collectives."""
     return comm_report(fn, *args, **kwargs).assert_no_collectives(what)
+
+
+# ---------------------------------------------------------------------------
+# Overlap analysis: is there compute to hide each collective behind?
+# ---------------------------------------------------------------------------
+#
+# ``overlap_report`` walks the OPTIMIZED (scheduled) HLO and scores every
+# collective instruction two ways:
+#
+# * ``slack`` — schedule-order separation: the number of compute ops placed
+#   between the collective's issue point and the point its result is first
+#   consumed (for async ``-start``/``-done`` pairs: between start and done).
+#   Anything scheduled in that window is by construction independent of the
+#   in-flight transfer, so slack is exactly "compute the backend can run
+#   while the wire is busy" under this schedule.
+# * ``concurrent`` — dependence-graph eligibility: compute ops in the same
+#   computation that are neither ancestors nor descendants of the
+#   collective. This is scheduler-independent: it measures whether the
+#   PROGRAM exposes overlap at all. A monolithic serialized chain scores 0;
+#   the chunked-ring pipeline (``pmm3d.ring_psum_chunked``) scores >= 1 on
+#   every all-gather-phase step because each per-chunk GEMM branches off
+#   the transfer chain.
+#
+# The CPU backend emits synchronous collectives only (no -start/-done
+# pairs), so host-mesh CI asserts on ``concurrent``; on GPU the async pairs
+# are scored by the same walk.
+
+_COMPUTE_OPS = frozenset(("dot", "fusion", "convolution", "custom-call"))
+
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(\([^)]*\)|\S+)\s+([\w\-]+)")
+_REF_RE = re.compile(r"%([\w.\-]+)")
+_OPNAME_RE = re.compile(r'op_name="([^"]*)"')
+
+
+@dataclasses.dataclass(frozen=True)
+class CollectiveSite:
+    """One collective instruction in the optimized HLO, overlap-scored."""
+
+    kind: str          # base opcode, e.g. "collective-permute"
+    name: str          # instruction name
+    op_name: str       # metadata op_name (named_scope path), "" if absent
+    is_async: bool     # emitted as a -start/-done pair
+    slack: int         # compute ops scheduled while the transfer is in flight
+    concurrent: int    # compute ops dependence-eligible to overlap
+
+
+@dataclasses.dataclass(frozen=True)
+class OverlapReport:
+    """Overlap scores for every collective of one compiled program."""
+
+    sites: Tuple[CollectiveSite, ...]
+
+    def for_scope(self, *substrings: str) -> Tuple[CollectiveSite, ...]:
+        """Sites whose metadata op_name contains ALL the substrings (use
+        the engine's named scopes: "gemm", "reshard", "ring_ag", ...)."""
+        return tuple(s for s in self.sites
+                     if all(sub in s.op_name for sub in substrings))
+
+    @property
+    def n_collectives(self) -> int:
+        return len(self.sites)
+
+    @property
+    def n_overlapped(self) -> int:
+        """Sites with at least one dependence-eligible compute op."""
+        return sum(1 for s in self.sites if s.concurrent >= 1)
+
+    def assert_overlapped(self, *scope: str, min_compute: int = 1,
+                          what: str = "program") -> "OverlapReport":
+        """Assert every collective in ``scope`` (all when empty) has at
+        least ``min_compute`` compute ops eligible to hide it — the
+        structural gate host-mesh CI runs on the pipelined program."""
+        sites = self.for_scope(*scope) if scope else self.sites
+        assert sites, (f"{what}: no collectives match scope {scope} — "
+                       "nothing to assert overlap on")
+        bad = [s for s in sites if s.concurrent < min_compute]
+        assert not bad, (
+            f"{what}: {len(bad)}/{len(sites)} collectives in scope {scope} "
+            f"have < {min_compute} overlappable compute ops: "
+            + ", ".join(f"{s.name}({s.concurrent})" for s in bad[:8]))
+        return self
+
+    def __str__(self) -> str:
+        if not self.sites:
+            return "OverlapReport(no collectives)"
+        rows = [f"  {s.kind:20s} {s.name:28s} slack={s.slack:3d} "
+                f"concurrent={s.concurrent:4d}"
+                + (" async" if s.is_async else "") for s in self.sites]
+        return "OverlapReport(\n" + "\n".join(rows) + "\n)"
+
+
+def _parse_computations(hlo_text: str):
+    """Split HLO text into computations -> ordered instruction records."""
+    comps, cur = [], None
+    for raw in hlo_text.splitlines():
+        line = raw.strip()
+        if line.endswith("{") and " = " not in line:
+            cur = []
+            comps.append(cur)
+            continue
+        if line.startswith("}"):
+            cur = None
+            continue
+        if cur is None:
+            continue
+        m = _INSTR_RE.match(line)
+        if not m:
+            continue
+        name, _shape, opcode = m.groups()
+        rest = line[m.end():]
+        mo = _OPNAME_RE.search(rest)
+        # strip attribute payloads that carry %-refs to OTHER computations
+        # (calls=, to_apply=, metadata) by only reading refs before the
+        # first attribute keyword is irrelevant: unknown names are dropped
+        # against the def table below anyway.
+        refs = _REF_RE.findall(rest)
+        cur.append({"name": name, "op": opcode, "refs": refs,
+                    "op_name": mo.group(1) if mo else ""})
+    return comps
+
+
+def parse_overlap(hlo_text: str) -> OverlapReport:
+    """Score every collective in (scheduled) HLO text. See module notes."""
+    sites = []
+    for instrs in _parse_computations(hlo_text):
+        pos = {r["name"]: i for i, r in enumerate(instrs)}
+        operands = [tuple(n for n in r["refs"] if n in pos and n != r["name"])
+                    for r in instrs]
+        users: List[List[int]] = [[] for _ in instrs]
+        for i, ops in enumerate(operands):
+            for n in ops:
+                users[pos[n]].append(i)
+        is_compute = [r["op"] in _COMPUTE_OPS for r in instrs]
+        n_compute = sum(is_compute)
+
+        def closure(start: int, edges) -> set:
+            seen, todo = set(), [start]
+            while todo:
+                i = todo.pop()
+                for j in edges(i):
+                    if j not in seen:
+                        seen.add(j)
+                        todo.append(j)
+            return seen
+
+        for i, r in enumerate(instrs):
+            base, suffix = r["op"], ""
+            for sfx in ("-start", "-done"):
+                if base.endswith(sfx):
+                    base, suffix = base[: -len(sfx)], sfx
+            if base not in COLLECTIVES or suffix == "-done":
+                continue
+            # the in-flight window: issue -> first consumer (sync), or
+            # start -> done (async)
+            if suffix == "-start":
+                done = next((j for j in users[i]
+                             if instrs[j]["op"] == base + "-done"), None)
+                end = done if done is not None else len(instrs)
+            else:
+                end = min(users[i], default=len(instrs))
+            slack = sum(1 for j in range(i + 1, end) if is_compute[j])
+            ancestors = closure(i, lambda k: (pos[n] for n in operands[k]))
+            descendants = closure(i, lambda k: users[k])
+            blocked = sum(1 for j in ancestors | descendants
+                          if is_compute[j])
+            sites.append(CollectiveSite(
+                kind=base, name=r["name"], op_name=r["op_name"],
+                is_async=suffix == "-start", slack=slack,
+                concurrent=n_compute - blocked))
+    return OverlapReport(sites=tuple(sites))
+
+
+def overlap_report(fn, *args, **kwargs) -> OverlapReport:
+    """Lower + compile ``fn(*args, **kwargs)`` and score every collective's
+    comm–compute overlap opportunity (see ``parse_overlap``)."""
+    jitted = fn if hasattr(fn, "lower") else jax.jit(fn)
+    compiled = jitted.lower(*args, **kwargs).compile()
+    return parse_overlap(compiled.as_text())

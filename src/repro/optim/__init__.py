@@ -1,6 +1,9 @@
 from repro.optim.adamw import AdamW, Sgd, clip_by_global_norm
 from repro.optim.schedules import (constant_schedule, cosine_schedule,
-                                   linear_warmup_cosine)
+                                   cosine_schedule_epochs, epochs_to_steps,
+                                   linear_warmup_cosine,
+                                   linear_warmup_cosine_epochs)
 
 __all__ = ["AdamW", "Sgd", "clip_by_global_norm", "constant_schedule",
-           "cosine_schedule", "linear_warmup_cosine"]
+           "cosine_schedule", "cosine_schedule_epochs", "epochs_to_steps",
+           "linear_warmup_cosine", "linear_warmup_cosine_epochs"]

@@ -1,7 +1,22 @@
-"""Learning-rate schedules (pure functions of the step)."""
+"""Learning-rate schedules (pure functions of the step).
+
+Two parameterizations of the same decay shapes: step-based
+(``cosine_schedule(peak, total_steps)``) and epoch-based
+(``cosine_schedule_epochs(peak, epochs, steps_per_epoch)``). The epoch
+forms exist because the runtime's natural unit is the epoch — batch size
+and dataset scale change ``steps_per_epoch``, and a schedule pinned to a
+step count silently decays too fast or too slow when they do. Both forms
+produce bit-identical values when ``total_steps == epochs *
+steps_per_epoch`` (the epoch forms delegate; they do not re-derive)."""
 from __future__ import annotations
 
 import jax.numpy as jnp
+
+
+def epochs_to_steps(epochs: int, steps_per_epoch: int) -> int:
+    """Total optimizer steps of an epoch-parameterized schedule."""
+    assert epochs >= 1 and steps_per_epoch >= 1, (epochs, steps_per_epoch)
+    return epochs * steps_per_epoch
 
 
 def constant_schedule(lr: float):
@@ -27,3 +42,21 @@ def linear_warmup_cosine(peak_lr: float, warmup_steps: int, total_steps: int,
                          * 0.5 * (1.0 + jnp.cos(jnp.pi * t)))
         return jnp.where(s < warmup_steps, warm, cos)
     return sched
+
+
+def cosine_schedule_epochs(peak_lr: float, epochs: int, steps_per_epoch: int,
+                           final_frac: float = 0.0):
+    """``cosine_schedule`` spanning exactly ``epochs`` whole epochs."""
+    return cosine_schedule(peak_lr, epochs_to_steps(epochs, steps_per_epoch),
+                           final_frac)
+
+
+def linear_warmup_cosine_epochs(peak_lr: float, warmup_epochs: float,
+                                epochs: int, steps_per_epoch: int,
+                                final_frac: float = 0.1):
+    """``linear_warmup_cosine`` with the warmup given in (fractional)
+    epochs and the decay horizon in whole epochs."""
+    warmup_steps = int(round(warmup_epochs * steps_per_epoch))
+    return linear_warmup_cosine(
+        peak_lr, warmup_steps, epochs_to_steps(epochs, steps_per_epoch),
+        final_frac)
