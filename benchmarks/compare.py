@@ -73,7 +73,7 @@ def main() -> None:
         print(f"no BENCH_*.json under {args.current}")
         return
 
-    n_reg = n_imp = n_ok = 0
+    n_reg = n_imp = n_ok = n_unb = 0
     for cur_path in current_files:
         base_path = os.path.join(baseline_dir, os.path.basename(cur_path))
         cur = load_bench(cur_path)
@@ -86,8 +86,17 @@ def main() -> None:
         rows = compare_entries(cur, base, threshold=args.threshold)
         print(f"\n== {cur['name']}  (baseline {base.get('git_sha')} -> "
               f"current {cur.get('git_sha')})")
+        mark = {"regression": "!!", "improvement": "++", "ok": "  ",
+                "unbaselined": "??"}
         for r in rows:
-            mark = {"regression": "!!", "improvement": "++", "ok": "  "}
+            if r["status"] == "unbaselined":
+                # previously dropped silently — surface it so a renamed or
+                # newly-added metric is visible in every compare run
+                print(f"  ?? {r['name']:32s} "
+                      f"{'(unbaselined)':>12s} -> "
+                      f"{r['current_us']:12.1f} us")
+                n_unb += 1
+                continue
             print(f"  {mark[r['status']]} {r['name']:32s} "
                   f"{r['baseline_us']:12.1f} -> {r['current_us']:12.1f} us "
                   f"(x{r['ratio']:.2f})")
@@ -95,7 +104,8 @@ def main() -> None:
             n_imp += r["status"] == "improvement"
             n_ok += r["status"] == "ok"
 
-    print(f"\n{n_ok} ok, {n_imp} improved, {n_reg} regressed "
+    print(f"\n{n_ok} ok, {n_imp} improved, {n_reg} regressed, "
+          f"{n_unb} unbaselined "
           f"(threshold {args.threshold:.0%} beyond baseline noise band)")
     if n_reg and args.strict:
         raise SystemExit(f"{n_reg} perf regressions (strict mode)")

@@ -37,6 +37,10 @@ BENCHMARKS = [
      "vs (2,2,2)-mesh sharded"),
     ("benchmarks.ablation_sampling_modes", 1,
      "Ablation: exact vs stratified sampling vs no-rescale control"),
+    ("benchmarks.comm_bytes", 8,
+     "Compression: deterministic per-device collective bytes by compress "
+     "mode (none/bf16/int8/int4) from compiled HLO — the comm-bytes CI "
+     "lane diffs these at --threshold 0.0"),
     ("benchmarks.roofline_report", 0,
      "Roofline: three terms per (arch x shape) from the dry-run"),
 ]

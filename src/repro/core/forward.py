@@ -44,11 +44,15 @@ import jax.numpy as jnp
 
 from repro.core import pmm3d
 from repro.core.gcn_model import GCNConfig
+from repro.core.precision import WIRE_FORMATS
 from repro.kernels import ops as kops
 from repro.obs.tracer import phase
 
 BACKENDS = ("dense", "ell", "csr")
 OVERLAPS = ("none", "ring")
+COMPRESS_SCHEDULES = ("uniform", "variable")
+# formats with a quantized (int) wire — the ones that carry error feedback
+QUANTIZED_FORMATS = ("int8", "int4")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -87,6 +91,36 @@ class TrainOptions:
     # Bit-identical to "none" at grid sides <= 2 (single-add reductions);
     # the FP32 loss/norm reductions stay monolithic either way.
     overlap_impl: str = "none"         # "none" | "ring"
+    # Compressed collectives (ROADMAP item 1): the STRONGEST wire format
+    # the engine may use for the PMM all-reduces and the residual reshard.
+    # "bf16" = bf16 wire everywhere (reshard gathers included — beyond the
+    # psum-only bf16_collectives knob); "int8"/"int4" send absmax-quantized
+    # ring chunks (4x / 8x fewer payload bytes) with per-site error-feedback
+    # accumulators carried in TrainState so accuracy holds. FP32 loss/norm
+    # reductions and gradient collectives stay uncompressed.
+    compress: str = "none"             # "none" | "bf16" | "int8" | "int4"
+    # Per-layer ratio schedule (the gnn_compress "variable" scheme):
+    # "uniform" puts `compress` on every layer; "variable" ramps the ladder
+    # bf16 -> int8 -> int4 with depth (early layers carry the least-settled
+    # activations, so they compress the least; deeper layers hardest),
+    # capped at `compress`.
+    compress_schedule: str = "uniform"  # "uniform" | "variable"
+
+
+def wire_format(compress: str, schedule: str, layer: int,
+                num_layers: int) -> str:
+    """The wire format layer ``layer`` (0-based) uses under the compression
+    knobs: "uniform" applies ``compress`` everywhere; "variable" ramps the
+    bf16 -> int8 -> int4 ladder with depth, capped at ``compress``."""
+    assert compress in WIRE_FORMATS, compress
+    assert schedule in COMPRESS_SCHEDULES, schedule
+    if compress in ("none", "bf16") or schedule == "uniform":
+        return compress
+    ladder = ["bf16", "int8", "int4"]
+    cap = ladder.index(compress)
+    if num_layers <= 1:
+        return compress
+    return ladder[int(layer * cap / (num_layers - 1) + 0.5)]
 
 
 def _dropout_key(opts: TrainOptions, step: jax.Array, layer: int,
@@ -133,9 +167,23 @@ class ForwardEngine:
     def __post_init__(self):
         assert self.backend in BACKENDS, self.backend
         assert self.opts.overlap_impl in OVERLAPS, self.opts.overlap_impl
+        assert self.opts.compress in WIRE_FORMATS, self.opts.compress
+        assert self.opts.compress_schedule in COMPRESS_SCHEDULES, (
+            self.opts.compress_schedule)
         if self.backend == "csr":
             assert self.csr_rows > 0, (
                 "backend 'csr' needs the static local row count (csr_rows)")
+        fmts = self.wire_formats
+        if "int4" in fmts:
+            # int4 packs two nibbles per byte along the feature axis
+            assert (self.cfg.d_hidden // self.grid_side) % 2 == 0, (
+                "int4 compression needs an even local feature width "
+                f"(d_hidden={self.cfg.d_hidden} / g={self.grid_side})")
+        if fmts[-1] == "int4":
+            ncl = -(-self.cfg.num_classes // self.grid_side)
+            assert ncl % 2 == 0, (
+                "int4 head compression needs an even local class width "
+                f"(padded classes/g = {ncl}); use int8 or pad num_classes")
 
     @classmethod
     def from_options(cls, cfg: GCNConfig, opts: TrainOptions, *,
@@ -148,6 +196,52 @@ class ForwardEngine:
         overridden (eval passes ``backend="csr"``)."""
         return cls(cfg=cfg, opts=opts, backend=backend or opts.spmm_impl,
                    grid_side=grid_side, csr_rows=csr_rows, dp_axis=dp_axis)
+
+    # -- the compressible-collective layer (ROADMAP item 1) ------------------
+
+    @property
+    def wire_formats(self) -> Tuple[str, ...]:
+        """Per-layer wire format under the compress/schedule knobs. Layer
+        ``li``'s format covers its SpMM + GEMM psums and residual reshard;
+        the input projection follows layer 0, the head the last layer."""
+        L = self.cfg.num_layers
+        return tuple(
+            wire_format(self.opts.compress, self.opts.compress_schedule,
+                        li, L) for li in range(L))
+
+    @property
+    def quantized(self) -> bool:
+        """True when any collective site sends an int8/int4 wire — exactly
+        the condition under which the engine carries error feedback."""
+        return bool(self.ef_sites())
+
+    def ef_sites(self) -> Tuple[Tuple[str, str], ...]:
+        """The ordered (site_name, fmt) pairs that carry an error-feedback
+        accumulator: every quantized collective site, in consumption order.
+        This is the ONE definition both ``__call__`` and the TrainState
+        EF-leaf construction (``fourd.make_ef``) derive from."""
+        fmts = self.wire_formats
+        sites = []
+        if fmts[0] in QUANTIZED_FORMATS:
+            sites.append(("proj", fmts[0]))
+        for li, f in enumerate(fmts):
+            if f not in QUANTIZED_FORMATS:
+                continue
+            if self.cfg.use_residual:
+                sites.append((f"l{li}_reshard", f))
+            sites.append((f"l{li}_spmm", f))
+            sites.append((f"l{li}_gemm", f))
+        if fmts[-1] in QUANTIZED_FORMATS:
+            sites.append(("head", fmts[-1]))
+        return tuple(sites)
+
+    def ef_site_shapes(self, batch_local: int) -> dict:
+        """Local (per-device) shape of each EF accumulator for a training
+        mini-batch of ``batch_local`` rows per vertex range."""
+        dloc = self.cfg.d_hidden // self.grid_side
+        ncl = -(-self.cfg.num_classes // self.grid_side)
+        return {site: (batch_local, ncl if site == "head" else dloc)
+                for site, _ in self.ef_sites()}
 
     # -- the three aggregation backends (one layer's A @ H + psum) -----------
 
@@ -229,22 +323,54 @@ class ForwardEngine:
     # -- the layer program ---------------------------------------------------
 
     def __call__(self, params, adj_blocks: Sequence[Any], x_local: jax.Array,
-                 *, step: jax.Array, train: bool
-                 ) -> Tuple[jax.Array, pmm3d.PlaneState]:
+                 *, step: jax.Array, train: bool,
+                 ef: Optional[dict] = None):
         """§III forward under 3D PMM. ``adj_blocks[l % len]`` is this
         device's adjacency block for layer l's rotation plane, in the
         backend's format (dense array, ELL pair, or CSR triple).
         ``x_local`` is the local feature block on plane (x, z).
 
-        Returns logits on plane (r_L, p_L) and the final PlaneState.
+        ``ef`` carries the error-feedback accumulators for the quantized
+        collective sites (``ef_sites``): when given, each quantized send
+        compresses ``x + ef[site]`` and the call returns
+        ``(logits, state, new_ef)`` with the fresh residuals; when ``None``
+        (eval / serving / the stateless make_train_step path) quantization
+        runs without feedback and the return is ``(logits, state)``.
         """
         cfg, opts = self.cfg, self.opts
         ring = opts.overlap_impl == "ring"
         st = pmm3d.initial_state()
+        fmts = self.wire_formats
+        collect = {} if ef is not None else None
+
+        def take_ef(site: str, like: jax.Array) -> jax.Array:
+            if ef is None:
+                return jnp.zeros_like(like, dtype=jnp.float32)
+            assert site in ef, f"missing EF accumulator for site '{site}'"
+            return ef[site]
+
+        def put_ef(site: str, resid: jax.Array) -> None:
+            if collect is not None:
+                collect[site] = resid
+
+        def ar(x, axis, fmt, site):
+            """The PMM all-reduce under the overlap + compression knobs:
+            quantized ring (with EF) for int formats, otherwise the PR-7
+            ring or the monolithic psum with an optionally-bf16 wire."""
+            if fmt in QUANTIZED_FORMATS:
+                y, r = pmm3d.compressed_psum(
+                    x, axis, fmt, take_ef(site, x),
+                    bwd_bf16=opts.bf16_collectives)
+                put_ef(site, r)
+                return y
+            bf = fmt == "bf16" or opts.bf16_collectives
+            if ring:
+                return pmm3d.ring_psum(x, axis, bf16=bf)
+            return pmm3d.psum_maybe_bf16(x, axis, bf)
 
         # input projection (Eq. 4): IN (x, z) @ W_in (z, y) -> psum z ->
         # F (x, y)
-        h = self._allreduce(x_local @ params["w_in"], "z")
+        h = ar(x_local @ params["w_in"], "z", fmts[0], "proj")
 
         # Fig. 8 phase annotations: jax.named_scope labels land in the HLO
         # metadata / profiler timeline; under jit the host spans measure
@@ -262,26 +388,52 @@ class ForwardEngine:
         # compiled HLO.
         for li, layer in enumerate(params["layers"]):
             blk = adj_blocks[li % len(adj_blocks)]
+            fmt = fmts[li]
+            quant = fmt in QUANTIZED_FORMATS
             # residual must move (r, c) -> (p, r) (paper §IV-C4)
             res = None
             if cfg.use_residual:
                 with phase("reshard"):
-                    res = pmm3d.reshard(h, st, (st.rep, st.row),
-                                        impl=opts.reshard_impl,
-                                        overlap=opts.overlap_impl)
+                    if quant:
+                        res, r = pmm3d.reshard_compressed(
+                            h, st, (st.rep, st.row), fmt,
+                            take_ef(f"l{li}_reshard", h),
+                            impl=opts.reshard_impl)
+                        put_ef(f"l{li}_reshard", r)
+                    elif fmt == "bf16":
+                        # bf16 wire on the reshard gathers too (beyond the
+                        # psum-only bf16_collectives knob)
+                        res = pmm3d.reshard(
+                            h.astype(jnp.bfloat16), st, (st.rep, st.row),
+                            impl=opts.reshard_impl,
+                            overlap=opts.overlap_impl).astype(h.dtype)
+                    else:
+                        res = pmm3d.reshard(h, st, (st.rep, st.row),
+                                            impl=opts.reshard_impl,
+                                            overlap=opts.overlap_impl)
             with phase("spmm"):
                 part = self.aggregate_local(blk, h)
-                if not ring:
-                    part = self._allreduce(part, st.row)
+                if not ring and not quant:
+                    part = ar(part, st.row, fmt, None)
             # GEMM (Eq. 6 / 28): H (p, c) @ W (c, r) -> psum c -> conv (p, r)
             with phase("gemm"):
-                if ring:
-                    conv = self._allreduce(
+                if quant:
+                    # quantized rings are inherently chunked, so the fused
+                    # reduce+GEMM pipeline applies at either overlap_impl
+                    conv_r, r = pmm3d.compressed_psum_gemm(
+                        part, layer["w"], st.row, fmt,
+                        take_ef(f"l{li}_spmm", part),
+                        bwd_bf16=opts.bf16_collectives)
+                    put_ef(f"l{li}_spmm", r)
+                    conv = ar(conv_r, st.col, fmt, f"l{li}_gemm")
+                elif ring:
+                    bf = fmt == "bf16" or opts.bf16_collectives
+                    conv = ar(
                         pmm3d.ring_psum_gemm(part, layer["w"], st.row,
-                                             bf16=opts.bf16_collectives),
-                        st.col)
+                                             bf16=bf),
+                        st.col, fmt, None)
                 else:
-                    conv = self._allreduce(part @ layer["w"], st.col)
+                    conv = ar(part @ layer["w"], st.col, fmt, None)
             dk = (_dropout_key(opts, step, li, st.rep, st.row, self.dp_axis)
                   if train and opts.dropout > 0 else None)
             with phase("tail"):
@@ -291,5 +443,7 @@ class ForwardEngine:
 
         # output head (Eq. 11): X (r, c) @ W_out (c, p) -> psum c ->
         # logits (r, p) rep c
-        logits = self._allreduce(h @ params["w_out"], st.col)
+        logits = ar(h @ params["w_out"], st.col, fmts[-1], "head")
+        if ef is not None:
+            return logits, st, collect
         return logits, st

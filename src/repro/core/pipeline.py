@@ -29,6 +29,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro.core import fourd as fourd_ef
 from repro.core import pmm3d
 from repro.core.compat import shard_map
 from repro.core.fourd import FourDPlan
@@ -82,14 +83,18 @@ def make_pipeline_fns(plan: FourDPlan):
       §V-A carry survives epoch boundaries inside the scan: prefetching
       batch ``t+1`` from the last step of an epoch derives the NEXT epoch's
       permutation — the paper's carry-across-epochs behavior.
-    * ``loss_fn(params, minibatch, step) -> (G_d,)`` — consume a carried
-      batch through the ONE ``ForwardEngine`` (``core/forward.py``).
+    * ``loss_fn(params, minibatch, step, ef=None) -> (G_d,)`` — consume a
+      carried batch through the ONE ``ForwardEngine`` (``core/forward.py``).
+      When the plan compresses collectives, pass the error-feedback pytree
+      (``fourd.make_ef``) and receive ``(losses, new_ef)`` — same contract
+      as ``fourd.make_loss_fn``.
     """
     cfg, builder = plan.cfg, plan.builder
     mesh = plan.mesh
     ds = plan.data_specs
     mb_specs = _minibatch_specs(plan)
     engine = plan.engine()
+    e_specs = fourd_ef.ef_specs(plan)
 
     def local_sample(shards: GraphShards, feats, labels, step,
                      epoch) -> Minibatch:
@@ -114,18 +119,42 @@ def make_pipeline_fns(plan: FourDPlan):
                                   graph["features"], graph["labels"], step,
                                   epoch)
 
-    def local_loss(params, mb: Minibatch, step):
+    def local_loss(params, mb: Minibatch, step, ef=None):
         mb = mb.strip_leading()
-        logits, st = engine(params, mb.adj, mb.feats, step=step, train=True)
+        if ef is None:
+            logits, st = engine(params, mb.adj, mb.feats, step=step,
+                                train=True)
+            new_ef = None
+        else:
+            logits, st, new_ef = engine(
+                params, mb.adj, mb.feats, step=step, train=True,
+                ef=fourd_ef._ef_squeeze(ef))
         nll_sum, cnt = pmm3d.parallel_cross_entropy(
             logits, mb.labels, class_axis=st.rep, row_axis=st.row,
             n_classes=cfg.num_classes)
-        return (nll_sum / jnp.maximum(cnt, 1.0))[None]
+        loss = (nll_sum / jnp.maximum(cnt, 1.0))[None]
+        if ef is None:
+            return loss
+        return loss, fourd_ef._ef_expand(new_ef)
 
-    loss_fn = shard_map(
+    loss_sharded = shard_map(
         local_loss, mesh=mesh,
         in_specs=(plan.p_specs, mb_specs, P()),
         out_specs=P("d"), check_vma=False)
+    loss_sharded_ef = None
+    if e_specs is not None:
+        loss_sharded_ef = shard_map(
+            local_loss, mesh=mesh,
+            in_specs=(plan.p_specs, mb_specs, P(), e_specs),
+            out_specs=(P("d"), e_specs), check_vma=False)
+
+    def loss_fn(params, minibatch, step, ef=None):
+        if ef is None:
+            return loss_sharded(params, minibatch, step)
+        assert loss_sharded_ef is not None, (
+            "loss_fn got an EF pytree but the plan's TrainOptions.compress "
+            "sends no quantized wire")
+        return loss_sharded_ef(params, minibatch, step, ef)
     return sample_fn, loss_fn
 
 

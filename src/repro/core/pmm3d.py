@@ -32,7 +32,8 @@ from typing import Sequence, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.core.precision import psum_fp32, psum_maybe_bf16
+from repro.core.precision import (WIRE_BITS, dequantize, psum_fp32,
+                                  psum_maybe_bf16, quantize)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -435,3 +436,333 @@ def ring_all_gather(x: jax.Array, axis_name: str, *, axis: int = 0
             out = jax.lax.dynamic_update_index_in_dim(
                 out, cur, (idx - 1 - s) % g, 0)
     return jnp.concatenate([out[k] for k in range(g)], axis=axis)
+
+
+# ---------------------------------------------------------------------------
+# Compressed ring collectives (quantized wire + error feedback, ROADMAP 1)
+# ---------------------------------------------------------------------------
+#
+# The ring forms above still move FP32 (or bf16) chunks. The ``*_q`` forms
+# below send each ring chunk QUANTIZED — int8 or nibble-packed int4 with one
+# FP32 scale per row (``precision.quantize``) — and dequantize on arrival,
+# so the dominant wire operand in the compiled HLO is a true ``s8`` array at
+# 1/4 (int8) or 1/8 (int4) of the FP32 bytes. Three properties matter:
+#
+# * **Replica consistency**: in the all-gather phase every device — the
+#   chunk's owner included — reconstructs the chunk from the SAME (q, scale)
+#   pair, so col-axis replicas of the activation stay bitwise identical and
+#   downstream psums cannot diverge (DESIGN.md §4).
+# * **Error feedback** (Karimireddy et al.; the gnn_compress recipe): each
+#   call takes this site's EF accumulator, quantizes ``x + ef``, and returns
+#   the new residual ``compensated - reconstructed`` alongside the result.
+#   The collectives here are *linear*, so a residual re-injected at any
+#   contributing device compensates the aggregate on the next step — the
+#   quantization error becomes a one-step-delayed correction instead of a
+#   bias, and end-of-run loss stays within noise of FP32 (asserted by
+#   tests/test_compress.py).
+# * **Straight-through gradients with a compressed transpose**: quantization
+#   is piecewise-constant, so the compressed wrappers carry a custom VJP
+#   whose STRUCTURE is the transpose of the uncompressed linear collective
+#   (psum -> psum of the cotangent; the reshard gather -> pad + two
+#   reduce-scatters, verified bitwise against ``jax.vjp`` of the FP32 path
+#   in tests) — but each backward hop is sent quantized too, at the same
+#   bit width as the forward site (``ring_reduce_scatter_q``). Backward
+#   quantization is STATELESS (no error feedback): cotangents are fresh
+#   every step, so there is no stable accumulator to re-inject into, and
+#   absmax-per-row gradient quantization at int8 stays within optimizer
+#   noise (asserted end-to-end by tests/test_compress.py). Without this the
+#   transpose reduce-scatters dominate the train step and cap the whole-
+#   program reduction near 2x; with it the step clears the >= 4x gate.
+
+
+def ring_psum_q(x: jax.Array, axis_name: str, bits: int,
+                ef: jax.Array, on_chunk=None
+                ) -> Tuple[jax.Array, jax.Array]:
+    """Quantized ring all-reduce: ``psum(x + ef, axis_name)`` with every
+    reduce-scatter and all-gather hop sent as (int8-packed q, FP32 row
+    scales) instead of full-width floats.
+
+    Returns ``(result_tree, residual)``: ``on_chunk`` (default identity)
+    consumes each reconstructed chunk on arrival exactly like
+    ``ring_psum_chunked``; ``residual`` is the per-element quantization
+    error this device injected (accumulated over its RS sends plus its
+    owned-chunk broadcast), to be carried into the next step's ``ef``.
+
+    At g == 1 there is no wire: the result is exact and the residual zero.
+    """
+    from repro.core.compat import axis_size
+    g = axis_size(axis_name)
+    consume = on_chunk if on_chunk is not None else (lambda c: c)
+    tc = (x + ef).astype(jnp.float32)
+    if g == 1:
+        return consume(tc), jnp.zeros_like(tc)
+
+    chunks, _pad = _chunk_rows(tc, g)
+    per = chunks.shape[1]
+    resid = jnp.zeros_like(chunks)
+    idx = jax.lax.axis_index(axis_name)
+    fwd = [(i, (i + 1) % g) for i in range(g)]
+
+    def add_resid(buf, ix, err):
+        prev = jax.lax.dynamic_index_in_dim(buf, ix, 0, keepdims=False)
+        return jax.lax.dynamic_update_index_in_dim(buf, prev + err, ix, 0)
+
+    # reduce-scatter phase: each hop moves one quantized chunk; the local
+    # quantization error stays here (in ``resid``), the receiver adds the
+    # reconstruction to its partial.
+    acc = chunks
+    with jax.named_scope("ring_rs_q"):
+        for s in range(g - 1):
+            send_ix = (idx - s) % g
+            v = jax.lax.dynamic_index_in_dim(acc, send_ix, 0, keepdims=False)
+            q, sc = quantize(v, bits)
+            resid = add_resid(resid, send_ix, v - dequantize(q, sc, bits))
+            qr = jax.lax.ppermute(q, axis_name, fwd)
+            scr = jax.lax.ppermute(sc, axis_name, fwd)
+            recv_ix = (idx - 1 - s) % g
+            upd = jax.lax.dynamic_index_in_dim(
+                acc, recv_ix, 0, keepdims=False) + dequantize(qr, scr, bits)
+            acc = jax.lax.dynamic_update_index_in_dim(acc, upd, recv_ix, 0)
+
+    # all-gather phase: the owner quantizes its completed chunk ONCE and the
+    # (q, scale) pair circulates verbatim; everyone — owner included —
+    # reconstructs from it, so all replicas hold identical values.
+    own_ix = (idx + 1) % g
+    own = jax.lax.dynamic_index_in_dim(acc, own_ix, 0, keepdims=False)
+    cur_q, cur_s = quantize(own, bits)
+    own_rec = dequantize(cur_q, cur_s, bits)
+    resid = add_resid(resid, own_ix, own - own_rec)
+
+    def place(buf, y, ix):
+        return jax.tree.map(
+            lambda b, a: jax.lax.dynamic_update_index_in_dim(b, a, ix, 0),
+            buf, y)
+
+    y = consume(own_rec)
+    assert all(a.shape[0] == per for a in jax.tree.leaves(y)), (
+        "on_chunk must preserve the chunk row count")
+    out = place(jax.tree.map(
+        lambda a: jnp.zeros((g,) + a.shape, a.dtype), y), y, own_ix)
+    with jax.named_scope("ring_ag_q"):
+        for s in range(g - 1):
+            cur_q = jax.lax.ppermute(cur_q, axis_name, fwd)
+            cur_s = jax.lax.ppermute(cur_s, axis_name, fwd)
+            out = place(out, consume(dequantize(cur_q, cur_s, bits)),
+                        (idx - s) % g)
+    rows = x.shape[0]
+    result = jax.tree.map(
+        lambda a: a.reshape((g * per,) + a.shape[2:])[:rows], out)
+    residual = resid.reshape((g * per,) + resid.shape[2:])[:rows]
+    return result, residual
+
+
+def _scatter_chunks(v: jax.Array, g: int, dim: int) -> jax.Array:
+    """Split ``v`` along ``dim`` (0 or 1; must divide evenly) into g chunks
+    stacked on a new leading axis, keeping the feature (last) axis intact so
+    per-row quantization scales stay meaningful."""
+    if dim == 0:
+        return v.reshape((g, v.shape[0] // g) + v.shape[1:])
+    assert dim == 1 and v.ndim == 2, (g, dim, v.shape)
+    return jnp.moveaxis(v.reshape(v.shape[0], g, v.shape[1] // g), 1, 0)
+
+
+def ring_reduce_scatter_q(v: jax.Array, axis_name: str, bits: int, *,
+                          dim: int = 0) -> jax.Array:
+    """Quantized tiled reduce-scatter: ``psum(v)`` over ``axis_name`` with
+    device ``idx`` keeping slice ``idx`` along ``dim`` — the transpose of a
+    tiled all-gather — sent as g-1 quantized ring hops.
+
+    Stateless (no error feedback): this runs on gradient cotangents, which
+    are fresh every step. ``v.shape[dim]`` must divide evenly by g (the
+    callers reduce-scatter g-block-tiled cotangents, so it always does)."""
+    from repro.core.compat import axis_size
+    g = axis_size(axis_name)
+    if g == 1:
+        return v
+    assert v.shape[dim] % g == 0, (v.shape, dim, g)
+    idx = jax.lax.axis_index(axis_name)
+    fwd = [(i, (i + 1) % g) for i in range(g)]
+    acc = _scatter_chunks(v.astype(jnp.float32), g, dim)
+    # the standard RS ring shifted by -1 so device idx ends holding complete
+    # chunk idx (matching jax.lax.psum_scatter's tiled convention)
+    with jax.named_scope("ring_rs_q"):
+        for s in range(g - 1):
+            send_ix = (idx - s - 1) % g
+            vch = jax.lax.dynamic_index_in_dim(acc, send_ix, 0,
+                                               keepdims=False)
+            q, sc = quantize(vch, bits)
+            qr = jax.lax.ppermute(q, axis_name, fwd)
+            scr = jax.lax.ppermute(sc, axis_name, fwd)
+            recv_ix = (idx - s - 2) % g
+            upd = jax.lax.dynamic_index_in_dim(
+                acc, recv_ix, 0, keepdims=False) + dequantize(qr, scr, bits)
+            acc = jax.lax.dynamic_update_index_in_dim(acc, upd, recv_ix, 0)
+    return jax.lax.dynamic_index_in_dim(acc, idx, 0, keepdims=False)
+
+
+def compressed_psum(x: jax.Array, axis_name: str, fmt: str, ef: jax.Array,
+                    *, bwd_bf16: bool = False
+                    ) -> Tuple[jax.Array, jax.Array]:
+    """``psum(x + ef)`` over the quantized ring, with a straight-through
+    custom VJP: the backward has the transpose STRUCTURE of the uncompressed
+    psum (an all-reduce of the cotangent, exactly what ``jax.vjp`` of the
+    linear collective emits) but runs it over the same quantized ring, so
+    gradient hops ride the int8/int4 wire too (stateless — see the section
+    notes). Returns ``(reduced, residual)``; the residual gets a zero
+    cotangent (it is carried state, not a differentiated output)."""
+    del bwd_bf16    # the quantized bwd wire subsumes the bf16 cast
+    bits = WIRE_BITS[fmt]
+
+    @jax.custom_vjp
+    def f(x_, ef_):
+        return ring_psum_q(x_, axis_name, bits, ef_)
+
+    def f_fwd(x_, ef_):
+        return ring_psum_q(x_, axis_name, bits, ef_), None
+
+    def f_bwd(_, cts):
+        dy, _dr = cts
+        dx, _ = ring_psum_q(dy, axis_name, bits, jnp.zeros_like(dy))
+        return dx, jnp.zeros_like(dy)
+
+    f.defvjp(f_fwd, f_bwd)
+    return f(x, ef)
+
+
+def compressed_psum_gemm(part: jax.Array, w: jax.Array, row_axis: str,
+                         fmt: str, ef: jax.Array, *, bwd_bf16: bool = False
+                         ) -> Tuple[jax.Array, jax.Array]:
+    """The quantized counterpart of ``ring_psum_gemm``:
+    ``psum_q(part + ef, row_axis) @ w`` with each reconstructed chunk GEMMed
+    on arrival, so the int8/int4 transfers hide behind per-chunk matmuls on
+    the same pipelined schedule.
+
+    The custom VJP differentiates the actual forward w.r.t. ``w`` (full-
+    width ``agg.T @ dconv`` against the reconstructed aggregate — the true
+    gradient of the compressed program) and straight-through w.r.t.
+    ``part`` (the psum transpose, itself sent over the quantized ring —
+    stateless, see the section notes). Returns ``(conv, residual)``."""
+    del bwd_bf16    # the quantized bwd wire subsumes the bf16 cast
+    bits = WIRE_BITS[fmt]
+
+    @jax.custom_vjp
+    def f(p_, w_, e_):
+        (_agg, conv), r = ring_psum_q(
+            p_, row_axis, bits, e_, on_chunk=lambda c: (c, c @ w_))
+        return conv, r
+
+    def f_fwd(p_, w_, e_):
+        (agg, conv), r = ring_psum_q(
+            p_, row_axis, bits, e_, on_chunk=lambda c: (c, c @ w_))
+        return (conv, r), (agg, w_)
+
+    def f_bwd(res, cts):
+        dconv, _dr = cts
+        agg, w_ = res
+        dagg = dconv @ w_.T
+        dw = agg.T @ dconv
+        dpart, _ = ring_psum_q(dagg, row_axis, bits, jnp.zeros_like(dagg))
+        return dpart, dw, jnp.zeros_like(dagg)
+
+    f.defvjp(f_fwd, f_bwd)
+    return f(part, w, ef)
+
+
+def reshard_compressed(t: jax.Array, from_state: PlaneState,
+                       to_plane: Tuple[str, str], fmt: str, ef: jax.Array,
+                       impl: str = "gather"
+                       ) -> Tuple[jax.Array, jax.Array]:
+    """The residual reshard (§IV-C4) with a quantized wire: ``t + ef`` is
+    quantized ONCE, the (q, scales) pair moves through the ring all-gathers
+    (impl "gather") or the single block permutation (impl "permute"), and
+    every device dequantizes the blocks it consumes. The residual is the
+    local reconstruction error — re-injected next step, it compensates the
+    block wherever it landed (the reshard is a permutation of blocks).
+
+    Straight-through custom VJP: the backward has the transpose STRUCTURE
+    of the uncompressed reshard — inverse block permutation (impl
+    "permute") or pad + two tiled reduce-scatters (impl "gather"; verified
+    bitwise against ``jax.vjp`` of the FP32 gather in tests) — with every
+    cross-device hop sent quantized at the same bit width (stateless, see
+    the section notes). Returns ``(resharded, residual)``."""
+    bits = WIRE_BITS[fmt]
+    if (from_state.row, from_state.col) == to_plane:
+        return t, jnp.zeros_like(t)
+    from repro.core.compat import axis_size
+    g = axis_size(from_state.row)
+    if g == 1:
+        # every axis is singleton: the reshard is the identity and there is
+        # no wire — quantizing here would manufacture error from nothing
+        return t, jnp.zeros_like(t)
+    if bits == 4:
+        assert t.shape[-1] % 2 == 0, (
+            f"int4 reshard needs an even local column count, got {t.shape}")
+    br, bc = t.shape
+
+    def _move(t_, e_):
+        tc = (t_ + e_).astype(jnp.float32)
+        q, sc = quantize(tc, bits)
+        resid = tc - dequantize(q, sc, bits)
+        if impl == "permute":
+            axes = (from_state.row, from_state.col, from_state.rep)
+            perm = []
+            for i in range(g):
+                for j in range(g):
+                    for k in range(g):
+                        perm.append(((k * g + i) * g + j,
+                                     (i * g + j) * g + k))
+            qd = jax.lax.ppermute(q, axes, perm)
+            sd = jax.lax.ppermute(sc, axes, perm)
+            return dequantize(qd, sd, bits), resid
+        # gather: circulate the packed q and the scales through the same
+        # two ring all-gathers the FP32 path uses, then dequantize each
+        # (br, bc) block against its own scale column and slice ours out.
+        qf = ring_all_gather(q, from_state.row, axis=0)
+        qf = ring_all_gather(qf, from_state.col, axis=1)
+        sf = ring_all_gather(sc, from_state.row, axis=0)
+        sf = ring_all_gather(sf, from_state.col, axis=1)   # (g*br, g)
+        blocks = qf.reshape(g * br, g, -1)                 # (rows, g, pc)
+        vals = dequantize(blocks, sf[:, :, None], bits)    # (rows, g, bc)
+        full = vals.reshape(g * br, g * bc)
+        i = jax.lax.axis_index(to_plane[0])
+        j = jax.lax.axis_index(to_plane[1])
+        return jax.lax.dynamic_slice(full, (i * br, j * bc), (br, bc)), resid
+
+    @jax.custom_vjp
+    def f(t_, e_):
+        return _move(t_, e_)
+
+    def f_fwd(t_, e_):
+        return _move(t_, e_), None
+
+    def f_bwd(_, cts):
+        dout, _dr = cts
+        if impl == "permute":
+            # transpose of a cross-device block permutation = the inverse
+            # permutation; move the (q, scales) pair instead of floats
+            axes = (from_state.row, from_state.col, from_state.rep)
+            inv = []
+            for i in range(g):
+                for j in range(g):
+                    for k in range(g):
+                        inv.append(((i * g + j) * g + k,
+                                    (k * g + i) * g + j))
+            dq, ds = quantize(dout.astype(jnp.float32), bits)
+            dqd = jax.lax.ppermute(dq, axes, inv)
+            dsd = jax.lax.ppermute(ds, axes, inv)
+            dt = dequantize(dqd, dsd, bits)
+        else:
+            # transpose of AG(row) -> AG(col) -> slice(i,j): pad the
+            # cotangent into its block position, then tiled reduce-scatter
+            # back over col then row — each hop quantized
+            i = jax.lax.axis_index(to_plane[0])
+            j = jax.lax.axis_index(to_plane[1])
+            d_full = jnp.zeros((g * br, g * bc), jnp.float32)
+            d_full = jax.lax.dynamic_update_slice(
+                d_full, dout.astype(jnp.float32), (i * br, j * bc))
+            d1 = ring_reduce_scatter_q(d_full, from_state.col, bits, dim=1)
+            dt = ring_reduce_scatter_q(d1, from_state.row, bits, dim=0)
+        return dt.astype(dout.dtype), jnp.zeros_like(dout)
+
+    f.defvjp(f_fwd, f_bwd)
+    return f(t, ef)

@@ -1,5 +1,6 @@
-"""Low-precision numerics: collective communication (ScaleGNN §V-B) and
-row-quantized storage (serving embedding cache).
+"""Low-precision numerics: collective communication (ScaleGNN §V-B and the
+compressed-collective layer beyond it) and row-quantized storage (serving
+embedding cache).
 
 The paper casts FP32 partial sums to BF16 *only for the 3D-PMM all-reduces*,
 keeping numerically sensitive reductions (parallel RMSNorm, logit reduction
@@ -7,10 +8,18 @@ in parallel cross-entropy) in FP32, and all local compute in FP32. On TPU the
 ICI moves bf16 natively, halving the volume of the dominant collectives —
 identical intent, jax-native mechanism.
 
-The int8 row quantizers below serve `repro/serve/cache.py`: cached per-vertex
-embeddings are stored at 1 byte/element + one FP32 scale per row (symmetric
-absmax quantization), quartering cache memory vs FP32. They are host-side
-(numpy) by design — cache lookups happen outside the jitted apply function.
+Beyond bf16, the jittable quantizers below (``quantize``/``dequantize``) put
+int8 and packed int4 on the wire: symmetric absmax over the last axis, one
+FP32 scale per row, int4 packed two-nibbles-per-byte so the HLO operand is a
+true half-width ``s8`` array. ``pmm3d`` builds the quantized ring collectives
+on top of them; quantization error is carried per site by the error-feedback
+accumulators in ``TrainState`` (see ``core/forward.py``), so training
+accuracy holds at 4–8× fewer bytes on the wire.
+
+The int8 row quantizers at the bottom serve `repro/serve/cache.py`: cached
+per-vertex embeddings are stored at 1 byte/element + one FP32 scale per row,
+quartering cache memory vs FP32. They are host-side (numpy) by design —
+cache lookups happen outside the jitted apply function.
 """
 from __future__ import annotations
 
@@ -21,6 +30,15 @@ import jax.numpy as jnp
 import numpy as np
 
 AxisName = Union[str, tuple]
+
+# Wire formats of the compressible-collective layer, weakest to strongest.
+# "none" = FP32 wire (subject to the legacy bf16_collectives knob).
+WIRE_FORMATS = ("none", "bf16", "int8", "int4")
+
+# quantized formats -> bits per element on the wire
+WIRE_BITS = {"int8": 8, "int4": 4}
+
+_QMAX = {8: 127, 4: 7}
 
 
 def psum_maybe_bf16(x: jax.Array, axis_name: AxisName,
@@ -39,6 +57,68 @@ def psum_fp32(x: jax.Array, axis_name: AxisName) -> jax.Array:
     """Always-FP32 all-reduce for numerically sensitive reductions
     (RMSNorm sum-of-squares, logsumexp terms)."""
     return jax.lax.psum(x, axis_name)
+
+
+# ---------------------------------------------------------------------------
+# Jittable absmax quantizers (the compressed-collective wire format)
+# ---------------------------------------------------------------------------
+#
+# Promoted from the host-side serving-cache quantizer below: same symmetric
+# absmax scheme (one FP32 scale per last-axis row; all-zero rows get scale
+# 1.0 and quantize to zeros), but as jnp ops so they trace into the ring
+# collectives inside shard_map. int4 packs two nibbles per int8 byte, so the
+# ppermute operand really is a half-width s8 array in the compiled HLO — the
+# byte reduction is measurable by ``obs.comm_report``, not estimated.
+
+
+def absmax_scale(x: jax.Array, bits: int) -> jax.Array:
+    """Per-row (last axis) symmetric absmax scale; 1.0 for all-zero rows."""
+    amax = jnp.max(jnp.abs(x), axis=-1, keepdims=True)
+    return jnp.where(amax > 0, amax / _QMAX[bits], 1.0).astype(jnp.float32)
+
+
+def pack_int4(q: jax.Array) -> jax.Array:
+    """Pack int4 values (int8 storage, range [-7, 7]) two per byte along the
+    last axis (must be even): element 2k in the low nibble, 2k+1 high."""
+    assert q.shape[-1] % 2 == 0, (
+        f"int4 packing needs an even last axis, got {q.shape}")
+    u = q.astype(jnp.uint8) & 0xF
+    return (u[..., ::2] | (u[..., 1::2] << 4)).astype(jnp.int8)
+
+
+def unpack_int4(packed: jax.Array) -> jax.Array:
+    """Inverse of :func:`pack_int4`: (..., n/2) s8 -> (..., n) int8."""
+    u = packed.astype(jnp.uint8)
+    nib = jnp.stack([u & 0xF, u >> 4], axis=-1).reshape(
+        packed.shape[:-1] + (2 * packed.shape[-1],))
+    v = nib.astype(jnp.int8)
+    return jnp.where(v >= 8, v - 16, v)
+
+
+def quantize(x: jax.Array, bits: int) -> Tuple[jax.Array, jax.Array]:
+    """Symmetric absmax quantization over the last axis (jittable).
+
+    Returns ``(q, scale)``: ``q`` int8 — of ``x.shape`` at 8 bits, nibble-
+    packed to half width at 4 bits — and ``scale`` float32 of
+    ``x.shape[:-1] + (1,)`` such that ``dequantize(q, scale, bits)`` ~= x
+    with per-element error <= scale/2 for finite inputs.
+    """
+    assert bits in _QMAX, bits
+    x = x.astype(jnp.float32)
+    scale = absmax_scale(x, bits)
+    q = jnp.clip(jnp.rint(x / scale), -_QMAX[bits], _QMAX[bits]).astype(
+        jnp.int8)
+    if bits == 4:
+        q = pack_int4(q)
+    return q, scale
+
+
+def dequantize(q: jax.Array, scale: jax.Array, bits: int) -> jax.Array:
+    """Inverse of :func:`quantize` (up to the absmax rounding error)."""
+    assert bits in _QMAX, bits
+    if bits == 4:
+        q = unpack_int4(q)
+    return q.astype(jnp.float32) * scale
 
 
 # ---------------------------------------------------------------------------

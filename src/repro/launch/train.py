@@ -58,6 +58,18 @@ def build_argparser() -> argparse.ArgumentParser:
     ap.add_argument("--lr", type=float, default=5e-3)
     ap.add_argument("--dropout", type=float, default=0.2)
     ap.add_argument("--bf16-collectives", action="store_true")
+    ap.add_argument("--compress", default="none",
+                    choices=["none", "bf16", "int8", "int4"],
+                    help="wire format of the PMM collectives: 'bf16' casts "
+                         "sends, 'int8'/'int4' quantize each ring chunk "
+                         "(absmax, per-row scales) with error feedback "
+                         "carried across steps in the TrainState")
+    ap.add_argument("--compress-schedule", default="uniform",
+                    choices=["uniform", "variable"],
+                    help="'uniform': every layer uses --compress; "
+                         "'variable': ramp bf16->int8->int4 by depth, "
+                         "capped at --compress (deeper layers compress "
+                         "harder)")
     ap.add_argument("--fused-elementwise", action="store_true")
     ap.add_argument("--reshard", default="gather",
                     choices=["gather", "permute"])
@@ -124,6 +136,7 @@ def main(argv=None):
         bf16_collectives=args.bf16_collectives,
         fused_elementwise=args.fused_elementwise,
         reshard_impl=args.reshard, overlap_impl=args.overlap,
+        compress=args.compress, compress_schedule=args.compress_schedule,
         dropout=args.dropout, seed=args.seed,
         sample_mode=args.sample_mode)
     plan = fourd.build_plan(pg, cfg, mesh, batch=args.batch, opts=opts)

@@ -15,6 +15,7 @@ from repro.obs.bench import (  # noqa: F401
 from repro.obs.hlo import (  # noqa: F401
     COLLECTIVES,
     CollectiveSite,
+    CommOp,
     CommReport,
     OverlapReport,
     assert_no_collectives,
@@ -23,6 +24,7 @@ from repro.obs.hlo import (  # noqa: F401
     parse_hlo,
     parse_overlap,
     shape_bytes,
+    shape_dtype_bytes,
 )
 from repro.obs.metrics import LatencyHistogram  # noqa: F401
 from repro.obs.tracer import (  # noqa: F401

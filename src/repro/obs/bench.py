@@ -116,15 +116,30 @@ def compare_entries(current: Dict[str, Any], baseline: Dict[str, Any],
 
     A change counts only when the median moved by more than ``threshold``
     (relative) AND landed outside the baseline's [p10, p90] noise band
-    (when the baseline recorded one). Returns one row per common entry:
+    (when the baseline recorded one). Returns one row per current entry:
     ``{name, baseline_us, current_us, ratio, status}`` with status in
-    ``{"ok", "regression", "improvement"}``.
+    ``{"ok", "regression", "improvement", "unbaselined"}`` —
+    ``unbaselined`` means the entry exists in the current run but the
+    baseline has no (usable) median for it, so nothing was compared. These
+    used to be dropped silently, which let a renamed metric dodge the gate.
     """
     base = {e["name"]: e for e in baseline.get("entries", [])}
     rows = []
     for ent in current.get("entries", []):
         b = base.get(ent["name"])
-        if b is None or not b.get("median_us"):
+        if b is None or b.get("median_us") is None:
+            rows.append({"name": ent["name"], "baseline_us": None,
+                         "current_us": ent["median_us"], "ratio": None,
+                         "status": "unbaselined"})
+            continue
+        if b["median_us"] == 0:
+            # a zero baseline is meaningful for deterministic byte/count
+            # metrics ("stays zero"): any growth is a regression outright
+            grew = ent["median_us"] > 0
+            rows.append({"name": ent["name"], "baseline_us": 0.0,
+                         "current_us": ent["median_us"],
+                         "ratio": float("inf") if grew else 1.0,
+                         "status": "regression" if grew else "ok"})
             continue
         ratio = ent["median_us"] / b["median_us"]
         status = "ok"

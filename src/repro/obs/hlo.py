@@ -13,6 +13,12 @@ Byte convention: for each collective instruction we count the bytes of its
 RESULT shape on one device. For an all-gather that is the gathered (full)
 shape; for an all-reduce / collective-permute the local shape; async
 ``-start``/``-done`` pairs are counted once (at the start op).
+
+The report also keeps one :class:`CommOp` record per collective (kind,
+payload dtype, bytes, metadata ``op_name``), so bytes can be attributed to
+named scopes (``bytes_for_scope("ring_rs_q")``) and to wire dtypes
+(``bytes_by_dtype()``) — the seam the compressed-collective work asserts
+its s8-payload reductions on.
 """
 from __future__ import annotations
 
@@ -40,9 +46,9 @@ _OP_RE = re.compile(
     r"(-start|-done)?\(")
 
 
-def shape_bytes(shape_str: str) -> int:
-    """Total bytes of an HLO shape string (tuples summed)."""
-    total = 0
+def shape_dtype_bytes(shape_str: str) -> Dict[str, int]:
+    """Per-dtype bytes of an HLO shape string (tuple elements summed)."""
+    per: Dict[str, int] = {}
     for dt, dims in _SHAPE_RE.findall(shape_str):
         if dt not in _DTYPE_BYTES:
             continue
@@ -50,8 +56,27 @@ def shape_bytes(shape_str: str) -> int:
         for d in dims.split(","):
             if d:
                 n *= int(d)
-        total += n * _DTYPE_BYTES[dt]
-    return total
+        per[dt] = per.get(dt, 0) + n * _DTYPE_BYTES[dt]
+    return per
+
+
+def shape_bytes(shape_str: str) -> int:
+    """Total bytes of an HLO shape string (tuples summed)."""
+    return sum(shape_dtype_bytes(shape_str).values())
+
+
+@dataclasses.dataclass(frozen=True)
+class CommOp:
+    """One collective instruction: kind, payload bytes, scope attribution.
+
+    ``dtype_bytes`` splits the result bytes by element type — a quantized
+    ring hop sends an ``(s8 payload, f32 scales)`` pair, and the split is
+    what lets tests assert on the s8 wire alone."""
+
+    kind: str                                  # e.g. "all-gather"
+    op_name: str                               # metadata scope path, or ""
+    bytes: int
+    dtype_bytes: Tuple[Tuple[str, int], ...]   # ((dtype, bytes), ...)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -60,6 +85,7 @@ class CommReport:
 
     counts: Dict[str, int]
     bytes: Dict[str, int]
+    sites: Tuple[CommOp, ...] = ()
 
     @property
     def total_count(self) -> int:
@@ -72,6 +98,26 @@ class CommReport:
     def kinds(self) -> Tuple[str, ...]:
         """Collective categories that actually appear, in canonical order."""
         return tuple(k for k in COLLECTIVES if self.counts.get(k, 0) > 0)
+
+    def for_scope(self, *substrings: str) -> Tuple[CommOp, ...]:
+        """Collectives whose metadata op_name contains ALL the substrings
+        (the engine's named scopes: "reshard", "ring_rs_q", ...)."""
+        return tuple(op for op in self.sites
+                     if all(sub in op.op_name for sub in substrings))
+
+    def bytes_for_scope(self, *substrings: str) -> int:
+        """Per-device bytes of the collectives in a named scope."""
+        return sum(op.bytes for op in self.for_scope(*substrings))
+
+    def bytes_by_dtype(self) -> Dict[str, int]:
+        """Total collective bytes split by payload element type — the
+        compressed wire shows up here as ``s8`` (int4 packs two values per
+        s8 byte, so both quantized formats land in the same bucket)."""
+        per: Dict[str, int] = {}
+        for op in self.sites:
+            for dt, b in op.dtype_bytes:
+                per[dt] = per.get(dt, 0) + b
+        return per
 
     def assert_no_collectives(self, what: str = "program") -> "CommReport":
         """The paper's central invariant, as one assert."""
@@ -92,14 +138,22 @@ def parse_hlo(hlo_text: str) -> CommReport:
     """Walk (compiled) HLO text; count collective ops and result bytes."""
     counts = {k: 0 for k in COLLECTIVES}
     byts = {k: 0 for k in COLLECTIVES}
+    sites = []
     for line in hlo_text.splitlines():
-        m = _OP_RE.match(line.strip())
+        stripped = line.strip()
+        m = _OP_RE.match(stripped)
         if not m or m.group(3) == "-done":
             continue
         kind = m.group(2)
+        per = shape_dtype_bytes(m.group(1))
+        total = sum(per.values())
         counts[kind] += 1
-        byts[kind] += shape_bytes(m.group(1))
-    return CommReport(counts=counts, bytes=byts)
+        byts[kind] += total
+        mo = _OPNAME_RE.search(stripped[m.end():])
+        sites.append(CommOp(kind=kind, op_name=mo.group(1) if mo else "",
+                            bytes=total,
+                            dtype_bytes=tuple(sorted(per.items()))))
+    return CommReport(counts=counts, bytes=byts, sites=tuple(sites))
 
 
 def comm_report(fn, *args, **kwargs) -> CommReport:

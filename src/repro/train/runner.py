@@ -149,6 +149,9 @@ class Trainer:
             self._sample_fn, self._mb_loss_fn = PL.make_pipeline_fns(plan)
         else:
             self._loss_fn = fourd.make_loss_fn(plan, train=True)
+        # compressed collectives (TrainOptions.compress int8/int4) carry
+        # per-site error-feedback accumulators in the scan state
+        self._uses_ef = plan.engine().quantized
         self.eval_fn = eval_fn if eval_fn is not None \
             else fourd.make_eval_step(plan)
         self._chunks = {}          # scan length -> jitted chunk fn
@@ -162,10 +165,12 @@ class Trainer:
     # -- state construction --------------------------------------------------
 
     def init_state(self, params, graph) -> TrainState:
-        """Fresh state at step 0 (with the warm-up batch when prefetching)."""
+        """Fresh state at step 0 (with the warm-up batch when prefetching,
+        zero EF accumulators when collectives are compressed)."""
         mb = (self._sample_fn(graph, jnp.zeros((), jnp.int32))
               if self.loop.prefetch else None)
-        return init_train_state(params, self.optimizer.init(params), mb)
+        ef = fourd.make_ef(self.plan) if self._uses_ef else None
+        return init_train_state(params, self.optimizer.init(params), mb, ef)
 
     def save(self, state: TrainState, directory: Optional[str] = None,
              *, sync: bool = True,
@@ -269,8 +274,21 @@ class Trainer:
                     "resume with prefetch off.")
             example = dataclasses.replace(example, minibatch=None)
             rebuild_carry = True
+        # pre-compression checkpoints lack the ".comm_ef" leaves; the EF
+        # residuals only shift WHEN quantization error is corrected, so a
+        # zero-EF restart is sound — backfill fresh accumulators instead of
+        # failing. (A checkpoint WITH EF restored into an uncompressed run
+        # drops the extra leaves automatically: example has comm_ef=None.)
+        ckpt_has_ef = any(k.split("::")[0].lstrip(".") == "comm_ef"
+                          for k in ckpt_keys)
+        backfill_ef = self._uses_ef and not ckpt_has_ef
+        if backfill_ef:
+            example = dataclasses.replace(example, comm_ef=None)
         state, _ = load_checkpoint(directory, step, example,
                                    name=CKPT_NAME)
+        if backfill_ef:
+            state = dataclasses.replace(state,
+                                        comm_ef=fourd.make_ef(self.plan))
         if backfill_epoch:
             state = dataclasses.replace(
                 state, epoch=jnp.asarray(state.step, jnp.int32)
@@ -294,15 +312,26 @@ class Trainer:
     def _build_chunk(self, length: int):
         opt = self.optimizer
         prefetch = self.loop.prefetch
+        uses_ef = self._uses_ef
         spe = self.steps_per_epoch
 
         def chunk(state: TrainState, graph):
             def body(st: TrainState, _):
                 if prefetch:
-                    def mean_loss(p):
-                        return self._mb_loss_fn(p, st.minibatch,
-                                                st.step).mean()
-                    loss, grads = jax.value_and_grad(mean_loss)(st.params)
+                    if uses_ef:
+                        def mean_loss(p):
+                            losses, new_ef = self._mb_loss_fn(
+                                p, st.minibatch, st.step, st.comm_ef)
+                            return losses.mean(), new_ef
+                        (loss, new_ef), grads = jax.value_and_grad(
+                            mean_loss, has_aux=True)(st.params)
+                    else:
+                        def mean_loss(p):
+                            return self._mb_loss_fn(p, st.minibatch,
+                                                    st.step).mean()
+                        loss, grads = jax.value_and_grad(mean_loss)(
+                            st.params)
+                        new_ef = st.comm_ef         # None subtree
                     # prefetch batch t+1: data-independent of the grads
                     # above, so XLA may overlap it with the backward pass.
                     # The epoch of step t+1 is derived here, INSIDE the
@@ -311,15 +340,26 @@ class Trainer:
                     next_mb = self._sample_fn(graph, st.step + 1,
                                               (st.step + 1) // spe)
                 else:
-                    def mean_loss(p):
-                        return self._loss_fn(p, graph, st.step,
-                                             st.epoch).mean()
-                    loss, grads = jax.value_and_grad(mean_loss)(st.params)
+                    if uses_ef:
+                        def mean_loss(p):
+                            losses, new_ef = self._loss_fn(
+                                p, graph, st.step, st.epoch, st.comm_ef)
+                            return losses.mean(), new_ef
+                        (loss, new_ef), grads = jax.value_and_grad(
+                            mean_loss, has_aux=True)(st.params)
+                    else:
+                        def mean_loss(p):
+                            return self._loss_fn(p, graph, st.step,
+                                                 st.epoch).mean()
+                        loss, grads = jax.value_and_grad(mean_loss)(
+                            st.params)
+                        new_ef = st.comm_ef         # None subtree
                     next_mb = st.minibatch          # None subtree
                 params, opt_state = opt.update(st.params, grads,
                                                st.opt_state)
                 return TrainState(params, opt_state, st.step + 1,
-                                  next_mb, (st.step + 1) // spe), loss
+                                  next_mb, (st.step + 1) // spe,
+                                  new_ef), loss
 
             return jax.lax.scan(body, state, None, length=length)
 

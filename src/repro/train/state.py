@@ -39,6 +39,11 @@ class TrainState:
     ``minibatch`` is the §V-A prefetch carry — batch ``step``, already
     constructed — or ``None`` when prefetch is off (an empty subtree, so
     the scan carry structure stays consistent either way).
+    ``comm_ef`` is the error-feedback carry of the compressed collectives
+    (``TrainOptions.compress`` int8/int4): one residual accumulator per
+    quantized collective site (``fourd.make_ef``), quantization error from
+    step t re-injected into step t+1's sends — or ``None`` when the wire is
+    uncompressed.
     """
 
     params: Any
@@ -46,11 +51,13 @@ class TrainState:
     step: jax.Array
     minibatch: Optional[Minibatch] = None
     epoch: Optional[jax.Array] = None
+    comm_ef: Optional[Any] = None
 
 
 def init_train_state(params, opt_state,
-                     minibatch: Optional[Minibatch] = None) -> TrainState:
-    """A fresh state at step 0, epoch 0."""
+                     minibatch: Optional[Minibatch] = None,
+                     comm_ef: Optional[Any] = None) -> TrainState:
+    """A fresh state at step 0, epoch 0 (EF accumulators start at zero)."""
     return TrainState(params=params, opt_state=opt_state,
                       step=jnp.zeros((), jnp.int32), minibatch=minibatch,
-                      epoch=jnp.zeros((), jnp.int32))
+                      epoch=jnp.zeros((), jnp.int32), comm_ef=comm_ef)

@@ -1,0 +1,64 @@
+"""Hypothesis property tests for the quantized-wire codec (core/precision).
+
+Property coverage over randomized shapes/magnitudes; the deterministic
+seed-sweep twins of these properties live in ``tests/test_compress.py`` so
+the codec stays covered when hypothesis is not installed (CI installs it
+via requirements-ci.txt — see the tier-1 job).
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis", reason="hypothesis not installed")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.core.precision import (  # noqa: E402
+    dequantize, pack_int4, quantize, unpack_int4,
+)
+
+
+def finite_rows(min_cols=2):
+    """(rows, cols) float32 arrays, finite, cols even (int4-packable)."""
+    return st.tuples(
+        st.integers(min_value=1, max_value=5),
+        st.integers(min_value=min_cols // 2, max_value=6),
+        st.integers(min_value=0, max_value=2 ** 31 - 1),
+        st.floats(min_value=-4.0, max_value=8.0),   # log2 magnitude
+    ).map(lambda t: np.asarray(
+        np.random.default_rng(t[2]).standard_normal((t[0], 2 * t[1]))
+        * (2.0 ** t[3]), np.float32))
+
+
+@settings(max_examples=50, deadline=None)
+@given(finite_rows(), st.sampled_from([8, 4]))
+def test_roundtrip_error_bounded_by_half_scale(x, bits):
+    q, sc = quantize(jnp.asarray(x), bits)
+    y = np.asarray(dequantize(q, sc, bits))
+    assert np.isfinite(y).all()
+    # absmax symmetric rounding: |x - deq(q)| <= scale/2 per row (+ float
+    # slack for the scale division itself)
+    bound = np.asarray(sc) * 0.5 * (1 + 1e-5) + 1e-12
+    assert (np.abs(x - y) <= bound).all(), (
+        np.abs(x - y).max(), bound.max())
+
+
+@settings(max_examples=30, deadline=None)
+@given(finite_rows(), st.sampled_from([8, 4]))
+def test_quantize_is_idempotent_on_its_own_grid(x, bits):
+    """deq(quant(x)) is a fixed point: re-quantizing moves nothing."""
+    q, sc = quantize(jnp.asarray(x), bits)
+    y = dequantize(q, sc, bits)
+    q2, sc2 = quantize(y, bits)
+    y2 = np.asarray(dequantize(q2, sc2, bits))
+    assert np.allclose(np.asarray(y), y2, rtol=1e-6, atol=1e-12)
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.lists(st.integers(min_value=-8, max_value=7), min_size=2,
+                max_size=16).filter(lambda v: len(v) % 2 == 0))
+def test_int4_pack_unpack_inverse(vals):
+    q = jnp.asarray(np.asarray(vals, np.int8).reshape(1, -1))
+    packed = pack_int4(q)
+    assert packed.dtype == jnp.int8
+    assert packed.shape[-1] == q.shape[-1] // 2       # true half-width wire
+    assert (np.asarray(unpack_int4(packed)) == np.asarray(q)).all()

@@ -388,6 +388,65 @@ print("PASS")
 
 
 @pytest.mark.slow
+def test_compressed_collectives_bytes_and_loss_2x2x2x2():
+    """Compressed-collective acceptance on the full (2,2,2)x2 mesh: the
+    compiled int8 fwd+bwd step moves >= 4x fewer reshard+rotate bytes than
+    the uncompressed plan (the ROADMAP item-1 claim, asserted on compiled
+    HLO via the per-site scope attribution), the dominant int8 payload is
+    true s8 on the wire, sampling stays zero-collective in every compress
+    mode, and a short EF-compensated int8 run lands within noise of the
+    FP32 loss."""
+    _run(COMMON + """
+from repro.core import pipeline as PL
+from repro.obs import comm_report
+from repro.optim import AdamW
+from repro.train import Trainer, TrainLoopConfig
+
+def build(compress):
+    opts = fourd.TrainOptions(compress=compress, seed=0)
+    plan_c = fourd.build_plan(pg, cfg, mesh, batch=128, opts=opts)
+    return plan_c, plan_c.shard_graph(pg)
+
+def step_rep(plan_c, graph_c):
+    p = plan_c.shard_params(M.init_params(jax.random.PRNGKey(1), cfg))
+    loss_fn = fourd.make_loss_fn(plan_c, train=True)
+    step = jnp.zeros((), jnp.int32)
+    if plan_c.engine().quantized:
+        ef = fourd.make_ef(plan_c)
+        def mean(pp, gg, ee):
+            l, ne = loss_fn(pp, gg, step, ef=ee)
+            return l.mean(), ne
+        return comm_report(jax.grad(mean, has_aux=True), p, graph_c, ef)
+    return comm_report(
+        jax.grad(lambda pp, gg: loss_fn(pp, gg, step).mean()), p, graph_c)
+
+reps, losses = {}, {}
+for mode in ("none", "int8"):
+    plan_c, graph_c = build(mode)
+    reps[mode] = step_rep(plan_c, graph_c)
+    sample_fn, _ = PL.make_pipeline_fns(plan_c)
+    comm_report(jax.jit(sample_fn), graph_c, jnp.asarray(0),
+                jnp.asarray(0)).assert_no_collectives(
+        f"sampling[{mode}] at (2,2,2)x2")
+    p = plan_c.shard_params(M.init_params(jax.random.PRNGKey(1), cfg))
+    tr = Trainer(plan_c, AdamW(lr=5e-3, grad_clip=1.0),
+                 TrainLoopConfig(total_steps=10, chunk_size=5))
+    state, log = tr.run(tr.init_state(p, graph_c), graph_c)
+    losses[mode] = float(log.losses[-1])
+
+rn, r8 = reps["none"], reps["int8"]
+ratio = r8.bytes_for_scope("reshard") / rn.bytes_for_scope("reshard")
+assert ratio <= 0.25, (
+    f"int8 reshard bytes only {1/ratio:.2f}x smaller (claim: >= 4x); "
+    f"{r8.bytes_for_scope('reshard')} vs {rn.bytes_for_scope('reshard')}")
+d8 = r8.bytes_by_dtype()
+assert d8.get("s8", 0) > d8.get("f32", 0), d8
+assert abs(losses["int8"] - losses["none"]) < 0.1, losses
+print("PASS", losses, "reshard_ratio", ratio)
+""")
+
+
+@pytest.mark.slow
 def test_block_ell_spmm_path_matches_dense():
     """§Perf H3.4: the block-ELL extraction + Pallas SpMM path produces
     the same distributed loss and gradients as the dense-block path."""

@@ -296,16 +296,23 @@ def test_compare_entries_thresholding():
         {"name": "b", "median_us": 100.0, "p10_us": 90.0, "p90_us": 110.0},
         {"name": "c", "median_us": 100.0, "p10_us": 90.0, "p90_us": 110.0},
         {"name": "gone", "median_us": 5.0},
+        {"name": "z0", "median_us": 0.0},
+        {"name": "z1", "median_us": 0.0},
     ]}
     cur = {"entries": [
         {"name": "a", "median_us": 200.0},     # 2.0x, above p90 band -> reg
         {"name": "b", "median_us": 120.0},     # within threshold -> ok
         {"name": "c", "median_us": 40.0},      # 0.4x, below p10 band -> imp
-        {"name": "new", "median_us": 1.0},     # no baseline -> skipped
+        {"name": "new", "median_us": 1.0},     # no baseline -> REPORTED
+        {"name": "z0", "median_us": 0.0},      # zero stayed zero -> ok
+        {"name": "z1", "median_us": 8.0},      # zero grew -> regression
     ]}
     rows = {r["name"]: r["status"]
             for r in compare_entries(cur, base, threshold=0.30)}
-    assert rows == {"a": "regression", "b": "ok", "c": "improvement"}
+    # "new" used to be dropped silently, letting a renamed metric dodge the
+    # gate; a zero baseline means "stays zero" (byte/count metrics)
+    assert rows == {"a": "regression", "b": "ok", "c": "improvement",
+                    "new": "unbaselined", "z0": "ok", "z1": "regression"}
 
 
 # ---------------------------------------------------------------------------
