@@ -37,6 +37,9 @@ BENCHMARKS = [
      "vs (2,2,2)-mesh sharded"),
     ("benchmarks.ablation_sampling_modes", 1,
      "Ablation: exact vs stratified sampling vs no-rescale control"),
+    ("benchmarks.locality_bench", 8,
+     "Locality sampling: uniform vs partition vs walk — support pool, "
+     "off-diagonal nnz, extraction time, collective bytes (2x2x2 mesh)"),
     ("benchmarks.comm_bytes", 8,
      "Compression: deterministic per-device collective bytes by compress "
      "mode (none/bf16/int8/int4) from compiled HLO — the comm-bytes CI "

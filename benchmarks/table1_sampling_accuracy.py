@@ -14,7 +14,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import csv
+from benchmarks.common import csv, set_bench
 from repro.core import baselines as BL
 from repro.core import gcn_model as M
 from repro.core import sampling as S
@@ -108,6 +108,7 @@ def train(method: str, ds, g):
 
 
 def main():
+    set_bench("table1", steps=STEPS, batch=B)
     ds, g = setup()
     results = {}
     for method in ("uniform", "saint", "sage"):

@@ -69,6 +69,18 @@ class TrainOptions:
     # one permutation per (seed, epoch, dp), step t takes slice t
     # (core/sampling.py; still communication-free).
     sample_mode: str = "step"          # "step" | "epoch"
+    # Sampling family (ROADMAP item 2): "stratified" draws per-range
+    # vertices uniformly (the paper's Alg. 1); "partition" draws whole
+    # locality clusters (Cluster-GCN-style — shrinks the off-diagonal
+    # support pool and tightens e_cap to q * max_cluster_block_nnz);
+    # "walk" grows GraphSAINT random-walk batches over a replicated
+    # in-range neighbor table. All three stay communication-free: the
+    # sample is a pure function of (seed, epoch, step, dp).
+    sample_kind: str = "stratified"    # "stratified" | "partition" | "walk"
+    clusters: int = 0                  # partition: clusters per range
+                                       # (0 = take PartitionedGraph.clusters)
+    walk_len: int = 4                  # walk: steps per root walk
+    walk_k: int = 8                    # walk: neighbor-table width
     # §Perf H3.3 (beyond-paper): dtype of the extracted dense mini-batch
     # adjacency blocks. bf16 halves the dominant memory stream of the 4D
     # step (the B x B blocks) while the SpMM accumulates in f32.

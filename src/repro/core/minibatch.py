@@ -152,7 +152,8 @@ class MinibatchBuilder:
     """
 
     scfg: smp.SampleConfig
-    mode: str = "stratified"          # 'stratified' | 'exact'
+    mode: str = "stratified"          # 'stratified' | 'exact' | 'partition'
+                                      # | 'walk'
     schedule: str = "step"            # 'step' | 'epoch' (without-replacement)
     fmt: BlockFormat = BlockFormat.DENSE
     impl: str = "jax"                 # 'jax' | 'pallas'
@@ -163,10 +164,24 @@ class MinibatchBuilder:
     seed: int = 0
 
     def __post_init__(self):
-        assert self.mode in ("exact", "stratified"), self.mode
+        assert self.mode in ("exact", "stratified", "partition", "walk"), \
+            self.mode
         assert self.schedule in ("step", "epoch"), self.schedule
         assert self.impl in ("jax", "pallas"), self.impl
         self.scfg.validate()
+        if self.mode == "partition":
+            assert self.scfg.clusters > 0, (
+                "partition mode needs SampleConfig.clusters — partition the "
+                "graph with build_partitioned_graph(..., clusters=C)")
+        if self.mode == "walk":
+            assert self.scfg.walk_len > 0 and self.scfg.walk_k > 0, (
+                "walk mode needs SampleConfig.walk_len/walk_k (the "
+                "replicated neighbor table from graphs.build_walk_tables)")
+        if self.mode in ("partition", "walk"):
+            assert self.impl == "jax", (
+                f"{self.mode} mode rescales per edge ((b, b) matrix) — the "
+                "fused Pallas extraction only supports scalar/per-column "
+                "rescale; use extract_impl='jax'")
         if self.impl == "pallas":
             assert self.max_row_nnz > 0, (
                 "the fused Pallas extraction needs the static per-row edge "
@@ -177,7 +192,7 @@ class MinibatchBuilder:
                      max_row_nnz: int = 0) -> "MinibatchBuilder":
         """Build from ``fourd.TrainOptions`` (duck-typed to avoid a cycle)."""
         return cls(
-            scfg=scfg, mode="stratified",
+            scfg=scfg, mode=getattr(opts, "sample_kind", "stratified"),
             schedule=getattr(opts, "sample_mode", "step"),
             fmt=BlockFormat.from_spmm_impl(opts.spmm_impl),
             impl=getattr(opts, "extract_impl", "jax"),
@@ -199,36 +214,60 @@ class MinibatchBuilder:
         ``TrainState`` runtime, pass it through instead)."""
         return jnp.asarray(step, jnp.int32) // self.steps_per_epoch
 
-    def sample(self, key: jax.Array,
-               t: jax.Array | None = None) -> jax.Array:
+    def sample(self, key: jax.Array, t: jax.Array | None = None,
+               aux: Optional[Dict[str, jax.Array]] = None) -> jax.Array:
         """(g, b) global vertex ids — sampling-mode dispatch. ``t`` is the
         step *within* the epoch (required under the 'epoch' schedule, where
         ``key`` is the epoch key and the sample is permutation slice ``t``;
-        ignored under 'step', where ``key`` is the per-step key)."""
+        ignored under 'step', where ``key`` is the per-step key). ``aux``
+        carries the replicated walk tables (walk mode only)."""
+        if self.mode == "walk":
+            nbr = aux["nbr"]
+            if self.schedule == "epoch":
+                assert t is not None, \
+                    "the epoch schedule needs the in-epoch step"
+                return smp.sample_walk_stratified(key, self.scfg, nbr, t=t)
+            return smp.sample_walk_stratified(key, self.scfg, nbr)
         if self.schedule == "epoch":
             assert t is not None, "the epoch schedule needs the in-epoch step"
             if self.mode == "exact":
                 s = smp.sample_epoch_exact(key, self.scfg.n_pad,
                                            self.scfg.batch, t)
                 return s[None]                   # one range at g = 1
+            if self.mode == "partition":
+                return smp.sample_partition_epoch(key, self.scfg, t)
             return smp.sample_epoch_stratified(key, self.scfg, t)
         if self.mode == "exact":
             s = smp.sample_uniform_exact(key, self.scfg.n_pad,
                                          self.scfg.batch)
             return s[None]                       # one range at g = 1
+        if self.mode == "partition":
+            return smp.sample_partition_stratified(key, self.scfg)
         return smp.sample_stratified(key, self.scfg)
 
     def sample_ids(self, step: jax.Array, epoch: jax.Array | None,
-                   dp_index: jax.Array | int) -> jax.Array:
+                   dp_index: jax.Array | int,
+                   aux: Optional[Dict[str, jax.Array]] = None) -> jax.Array:
         """Key derivation + schedule dispatch in one place: the (g, b)
         sample as a pure function of ``(seed, epoch, step, dp_index)`` —
-        identical on every device of a DP group, zero communication."""
+        identical on every device of a DP group, zero communication.
+
+        Partition + epoch with ``dp_groups > 1`` is special: the DP groups
+        share the UN-dp-folded epoch key and take interleaved slices of the
+        SAME cluster permutation, so together they cover every cluster
+        exactly once per epoch, disjointly (the paper's without-replacement
+        guarantee extended across the DP axis)."""
         step = jnp.asarray(step, jnp.int32)
         if self.schedule == "epoch":
             epoch = self.epoch_of(step) if epoch is None else epoch
             t = step - epoch * self.steps_per_epoch
-            return self.sample(smp.epoch_key(self.seed, epoch, dp_index), t)
-        return self.sample(smp.step_key(self.seed, step, dp_index))
+            if self.mode == "partition" and self.scfg.dp_groups > 1:
+                return smp.sample_partition_epoch(
+                    smp.epoch_key(self.seed, epoch, 0), self.scfg, t,
+                    dp_slot=dp_index)
+            return self.sample(smp.epoch_key(self.seed, epoch, dp_index), t,
+                               aux)
+        return self.sample(smp.step_key(self.seed, step, dp_index), aux=aux)
 
     def rescale_constants(self) -> Tuple[float, float]:
         """(1/p_same, 1/p_cross): Eq. 23, range-dependent under
@@ -238,6 +277,24 @@ class MinibatchBuilder:
             inv = (n - 1) / (b - 1) if b > 1 else 1.0
             return inv, inv
         return smp.rescale_constants(self.scfg)
+
+    def col_scale_fn(self, s2d: jax.Array,
+                     aux: Optional[Dict[str, jax.Array]] = None):
+        """The per-mode off-diagonal rescale as a ``(i, j) -> scale``
+        closure over the (g, b) sample (``extract_plane_blocks``'s
+        contract). Scalar for exact/stratified (Eq. 23); a (b, b) per-pair
+        matrix for partition (tri-level: cluster / range / cross) and walk
+        (the SAINT 1/q_uv edge normalization)."""
+        if self.mode == "partition":
+            inv_cc, inv_cr = smp.partition_rescale_constants(self.scfg)
+            return lambda i, j: smp.partition_col_scale(
+                s2d[i], s2d[j], i, j, self.scfg, inv_cc, inv_cr)
+        if self.mode == "walk":
+            p_incl = aux["p"]
+            return lambda i, j: smp.walk_col_scale(s2d[i], s2d[j], p_incl)
+        inv_same, inv_cross = self.rescale_constants()
+        return lambda i, j: smp.stratified_col_scale(
+            i, j, inv_same, inv_cross)
 
     # -- phases 2-4: block extraction ---------------------------------------
 
@@ -332,24 +389,25 @@ class MinibatchBuilder:
     def build_local(self, shards: GraphShards, feats_loc: jax.Array,
                     labels_loc: jax.Array, step: jax.Array,
                     num_layers: int, *, epoch: jax.Array | None = None,
-                    dp_axis: str = "d") -> Minibatch:
+                    dp_axis: str = "d",
+                    aux: Optional[Dict[str, jax.Array]] = None) -> Minibatch:
         """Alg. 2: communication-free construction of this device's batch.
 
-        Every device derives the identical stratified sample from (seed,
-        epoch, step, dp_index) — per-step key under the 'step' schedule,
-        epoch-permutation slice under 'epoch' (``epoch`` defaults to the
-        one the global step falls in) — and extracts its local adjacency
-        block for each of the three rotation planes, plus its feature/label
-        slices. NO collectives — asserted by tests on the lowered HLO.
+        Every device derives the identical sample from (seed, epoch, step,
+        dp_index) — per-step key under the 'step' schedule, epoch-
+        permutation slice under 'epoch' (``epoch`` defaults to the one the
+        global step falls in) — and extracts its local adjacency block for
+        each of the three rotation planes, plus its feature/label slices.
+        ``aux`` holds walk mode's REPLICATED tables ({'nbr', 'p'} from
+        ``graphs.build_walk_tables``), so its gathers stay device-local.
+        NO collectives in ANY mode — asserted by tests on the lowered HLO.
         """
-        s2d = self.sample_ids(step, epoch,
-                              jax.lax.axis_index(dp_axis))  # (g, b) ids
-        inv_same, inv_cross = self.rescale_constants()
+        s2d = self.sample_ids(step, epoch, jax.lax.axis_index(dp_axis),
+                              aux)                          # (g, b) ids
         with phase("extract"):
             blocks = self.extract_plane_blocks(
                 shards, s2d, num_layers,
-                col_scale_fn=lambda i, j: smp.stratified_col_scale(
-                    i, j, inv_same, inv_cross))
+                col_scale_fn=self.col_scale_fn(s2d, aux))
             # features on plane (x, z): rows = sample of range x_coord
             x_local = self.local_rows(feats_loc, s2d, "x")
             # labels sharded over the final row axis
@@ -363,6 +421,10 @@ class MinibatchBuilder:
                      val: jax.Array, features: jax.Array,
                      labels: jax.Array) -> smp.MiniBatch:
         """One-device batch in the configured sampling mode (Alg. 1)."""
+        assert self.mode in ("exact", "stratified"), (
+            f"build_single supports the Alg. 1 modes; {self.mode} mode is "
+            "distributed-only (build_local) — its single-device oracle is "
+            "core/baselines.py")
         if self.mode == "exact":
             s = self.sample(key)[0]
             inv_p, _ = self.rescale_constants()

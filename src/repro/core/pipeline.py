@@ -97,16 +97,16 @@ def make_pipeline_fns(plan: FourDPlan):
     e_specs = fourd_ef.ef_specs(plan)
 
     def local_sample(shards: GraphShards, feats, labels, step,
-                     epoch) -> Minibatch:
+                     epoch, aux) -> Minibatch:
         mb = builder.build_local(shards.squeeze_blocks(), feats, labels,
-                                 step, cfg.num_layers, epoch=epoch)
+                                 step, cfg.num_layers, epoch=epoch, aux=aux)
         # re-add leading dims so out_specs can scatter them on the mesh
         return mb.add_leading()
 
     sample_sharded = shard_map(
         local_sample, mesh=mesh,
         in_specs=(plan.shards_specs, ds["features"], plan.label_sp, P(),
-                  P()),
+                  P(), plan.aux_specs),
         out_specs=mb_specs, check_vma=False)
 
     def sample_fn(graph, step, epoch=None) -> Minibatch:
@@ -117,7 +117,7 @@ def make_pipeline_fns(plan: FourDPlan):
         with phase("sample"):
             return sample_sharded(GraphShards.from_graph(graph),
                                   graph["features"], graph["labels"], step,
-                                  epoch)
+                                  epoch, graph.get("walk", {}))
 
     def local_loss(params, mb: Minibatch, step, ef=None):
         mb = mb.strip_leading()

@@ -54,12 +54,35 @@ import jax.numpy as jnp
 
 
 class SampleConfig(NamedTuple):
-    """Static sampling parameters."""
+    """Static sampling parameters.
+
+    The locality-aware fields default to "unused" so every pre-existing
+    construction site keeps its meaning:
+
+    * ``clusters``  — partition mode (Cluster-GCN-style): number of
+                      equal-size contiguous clusters PER VERTEX RANGE; a
+                      step samples ``clusters_per_step`` whole clusters per
+                      range instead of scattered vertices. 0 = off.
+    * ``dp_groups`` — partition + epoch schedule only: DP groups sharing
+                      ONE (un-dp-folded) epoch cluster permutation and
+                      taking disjoint slices of it, so the groups jointly
+                      cover every cluster exactly once per epoch
+                      (``steps_per_epoch`` shrinks accordingly).
+    * ``walk_len``  — walk mode (GraphSAINT-style): random-walk steps per
+                      root; each root contributes its ``walk_len + 1``
+                      visited vertices to the batch. 0 = off.
+    * ``walk_k``    — width of the replicated degree-capped in-range
+                      neighbor table the walks traverse.
+    """
 
     n_pad: int          # padded vertex count (multiple of g)
     g: int              # grid side; 1 for single-device
     batch: int          # total mini-batch size B (multiple of g)
     e_cap: int          # static bound on extracted nnz per block
+    clusters: int = 0   # partition mode: clusters per vertex range (0 = off)
+    dp_groups: int = 1  # partition+epoch: DP groups slicing one permutation
+    walk_len: int = 0   # walk mode: steps per random walk (0 = off)
+    walk_k: int = 0     # walk mode: neighbor-table width
 
     @property
     def n_local(self) -> int:
@@ -70,16 +93,38 @@ class SampleConfig(NamedTuple):
         return self.batch // self.g
 
     @property
+    def cluster_size(self) -> int:
+        """Vertices per cluster (partition mode)."""
+        return self.n_local // self.clusters
+
+    @property
+    def clusters_per_step(self) -> int:
+        """q: whole clusters sampled per range per step (partition mode)."""
+        return self.b_local // self.cluster_size
+
+    @property
+    def walk_roots(self) -> int:
+        """Roots per range per step (walk mode): each contributes its
+        ``walk_len + 1`` visited vertices, filling the per-range batch."""
+        return self.b_local // (self.walk_len + 1)
+
+    @property
     def steps_per_epoch(self) -> int:
         """Full without-replacement slices one epoch permutation yields
         (``batch | n_pad`` covers every vertex exactly once per epoch; a
-        remainder < batch is dropped, the standard epoch convention)."""
-        return self.n_pad // self.batch
+        remainder < batch is dropped, the standard epoch convention).
+        Under partition + ``dp_groups > 1`` the groups take disjoint
+        slices of one permutation, so an epoch is jointly covered in
+        ``1/dp_groups`` of the steps."""
+        return self.n_pad // (self.batch * self.dp_groups)
 
     def validate(self) -> "SampleConfig":
-        """The batch must fit the (padded) vertex set — ``perm[:batch]``
-        with ``batch > n`` silently returns fewer vertices and corrupts the
-        Eq. 23 rescale downstream. Checked at plan/builder build time."""
+        """Reject configurations that would silently mis-sample instead of
+        failing: a too-large batch under-fills ``perm[:batch]`` and biases
+        the Eq. 23 rescale; a cluster count that does not tile the range /
+        batch / dp-slice layout makes the partition slices overlap or skip
+        clusters; a walk length that does not tile the per-range batch
+        produces zero roots. Checked at plan/builder build time."""
         assert self.batch <= self.n_pad, (
             f"batch={self.batch} exceeds the vertex count n_pad="
             f"{self.n_pad}: sampling would silently return fewer than "
@@ -87,6 +132,53 @@ class SampleConfig(NamedTuple):
         assert self.b_local <= self.n_local, (
             f"per-range batch {self.b_local} exceeds the range size "
             f"{self.n_local}")
+        if self.clusters:
+            assert self.n_local % self.clusters == 0, (
+                f"clusters={self.clusters} does not divide the range size "
+                f"n_local={self.n_local}: clusters must be equal-size "
+                "contiguous spans or the per-position cluster lookup "
+                "(id // cluster_size) mis-assigns vertices")
+            assert self.b_local % self.cluster_size == 0, (
+                f"per-range batch {self.b_local} is not a whole number of "
+                f"clusters (cluster_size={self.cluster_size}): partition "
+                "mode samples whole clusters; pick clusters so that "
+                "cluster_size divides batch//g")
+            assert self.clusters % (self.clusters_per_step
+                                    * self.dp_groups) == 0, (
+                f"clusters={self.clusters} is not divisible by "
+                f"clusters_per_step*dp_groups="
+                f"{self.clusters_per_step * self.dp_groups}: the epoch "
+                "permutation would leave a partial slice, so dp ranks "
+                "would overlap or skip clusters — choose clusters as a "
+                "multiple of (batch//g // cluster_size) * dp_groups")
+        else:
+            assert self.dp_groups == 1, (
+                f"dp_groups={self.dp_groups} > 1 requires partition mode "
+                "(clusters > 0): only the cluster permutation is sliced "
+                "dp-disjointly; other modes fold dp into the key")
+        if self.walk_len:
+            assert self.clusters == 0, (
+                "walk and partition modes are mutually exclusive in one "
+                "SampleConfig: set clusters=0 for walk mode")
+            assert self.walk_k >= 1, (
+                f"walk mode needs a neighbor table (walk_k="
+                f"{self.walk_k}); set walk_k >= 1")
+            assert self.walk_len + 1 <= self.b_local, (
+                f"walk_len={self.walk_len}: one walk visits "
+                f"{self.walk_len + 1} vertices, more than the per-range "
+                f"batch {self.b_local} — zero roots would be sampled; "
+                "shorten the walk or grow the batch")
+            assert self.b_local % (self.walk_len + 1) == 0, (
+                f"walk_len={self.walk_len}: walks of {self.walk_len + 1} "
+                f"vertices do not tile the per-range batch "
+                f"{self.b_local}; the remainder would be silently filled "
+                "with non-walk vertices at the walk rescale — pick "
+                "walk_len + 1 dividing batch//g")
+            assert self.e_cap >= self.b_local, (
+                f"e_cap={self.e_cap} is below the per-range batch "
+                f"{self.b_local}: the walk support extraction would "
+                "truncate edges of the visited vertices — size e_cap from "
+                "the row-degree bound (b * max_block_row_nnz)")
         return self
 
 
@@ -174,6 +266,210 @@ def sample_stratified(key: jax.Array, cfg: SampleConfig) -> jax.Array:
 
 
 # ---------------------------------------------------------------------------
+# Locality-aware sampling: partition (Cluster-GCN-style) and walk (SAINT)
+# ---------------------------------------------------------------------------
+#
+# Both modes keep the paper's invariant: the sample is a pure function of
+# (seed, epoch, step, dp_index), so every device of a DP group derives the
+# identical (g, b) vertex set with ZERO collectives (asserted on compiled
+# HLO by the multidevice tests). What changes is the sample's *shape in the
+# graph*: partition mode picks q whole contiguous clusters per range (after
+# the graphs/partition.py locality reordering, a cluster's neighborhood is
+# concentrated, so off-diagonal support shrinks and e_cap tightens to
+# q * max_cluster_block_nnz); walk mode grows the batch from random-walk
+# roots over a REPLICATED degree-capped in-range neighbor table (gathers
+# from replicated arrays are device-local — still no communication).
+
+def _expand_clusters(chosen: jax.Array, cluster_size: int) -> jax.Array:
+    """Sorted cluster ids -> their concatenated contiguous local-id spans.
+    Sorted cluster spans concatenate into a sorted id vector, preserving
+    the extraction contract (searchsorted membership needs sorted cols)."""
+    span = jnp.arange(cluster_size, dtype=chosen.dtype)
+    return (chosen[:, None] * cluster_size + span[None, :]).reshape(-1)
+
+
+def _cluster_ranks(key: jax.Array, clusters: int) -> jax.Array:
+    """Uniform random rank in ``[0, clusters)`` per cluster id —
+    ``rank[c]`` is c's position in a uniform random permutation — built
+    from pairwise comparisons of one uint32 draw per cluster (ties, at
+    probability ~C^2/2^32, break deterministically by id).
+
+    Comparison-only BY DESIGN: ``jax.random.permutation`` is a key/value
+    sort, and inside shard_map GSPMD (jax 0.4.x) can assign that tuple
+    sort MIXED shardings — the random-bits operand propagates
+    ``{replicated}`` forward from the (deliberately un-dp-folded) key
+    while the values operand picks up ``{manual}`` backward from its
+    consumers — and reconciling the mismatch materializes all-reduces in
+    the sampling program. Elementwise compares + reductions give the
+    partitioner no multi-output op to mis-shard, preserving the paper's
+    zero-communication sampling claim (asserted on compiled HLO by the
+    multidevice tests). O(C^2) compares is noise next to extraction for
+    realistic cluster counts."""
+    bits = jax.random.bits(key, (clusters,), jnp.uint32)
+    idx = jnp.arange(clusters, dtype=jnp.uint32)
+    ahead = bits[:, None] > bits[None, :]
+    tie = (bits[:, None] == bits[None, :]) & (idx[:, None] > idx[None, :])
+    return (ahead | tie).sum(1).astype(jnp.int32)
+
+
+def _select_ranked_clusters(rank: jax.Array, start: jax.Array | int,
+                            q: int, cluster_size: int) -> jax.Array:
+    """The local ids of the ``q`` clusters whose rank falls in
+    ``[start, start + q)``, expanded to contiguous spans in ascending
+    cluster order. Gather/sort-free for the same GSPMD reason as
+    ``_cluster_ranks``: membership is an elementwise rank-window test and
+    the ascending compaction is a one-hot sum."""
+    clusters = rank.shape[0]
+    idx = jnp.arange(clusters, dtype=jnp.int32)
+    start = jnp.asarray(start, jnp.int32)
+    mask = (rank >= start) & (rank < start + q)
+    # pos[c]: c's position among the chosen in ascending-id order
+    pos = ((idx[None, :] <= idx[:, None]) & mask[None, :]).sum(1) - 1
+    sel = mask[:, None] & (pos[:, None]
+                           == jnp.arange(q, dtype=jnp.int32)[None, :])
+    chosen = (idx[:, None] * sel.astype(jnp.int32)).sum(0)      # (q,) asc
+    return _expand_clusters(chosen, cluster_size)
+
+
+def sample_partition_stratified(key: jax.Array,
+                                cfg: SampleConfig) -> jax.Array:
+    """Partition mode, per-step schedule: q = b/cluster_size whole clusters
+    per range, drawn without replacement from a per-range cluster
+    permutation (the rank-window ``[0, q)``). Returns (g, b) global ids,
+    sorted within each range."""
+    q = cfg.clusters_per_step
+    keys = jax.random.split(key, cfg.g)
+
+    def per_range(i, k):
+        rank = _cluster_ranks(k, cfg.clusters)
+        return _select_ranked_clusters(rank, 0, q, cfg.cluster_size) \
+            + i * cfg.n_local
+
+    return jax.vmap(per_range)(jnp.arange(cfg.g), keys)
+
+
+def sample_partition_epoch(key: jax.Array, cfg: SampleConfig, t: jax.Array,
+                           dp_slot: jax.Array | int = 0) -> jax.Array:
+    """Partition mode, epoch schedule: ONE per-range cluster permutation
+    per (seed, epoch) and step ``t`` of dp rank ``dp_slot`` takes slice
+    ``t * dp_groups + dp_slot`` — the dp ranks share the UN-dp-folded
+    epoch key and jointly cover every cluster exactly once per epoch,
+    disjointly. (``dp_groups == 1`` reduces to plain without-replacement
+    slices, mirroring ``sample_epoch_stratified``; slice 0 equals the
+    per-step sampler bit for bit.)"""
+    q = cfg.clusters_per_step
+    keys = jax.random.split(key, cfg.g)
+    slot = (jnp.asarray(t, jnp.int32) * cfg.dp_groups
+            + jnp.asarray(dp_slot, jnp.int32))
+    start = slot * q
+
+    def per_range(i, k):
+        rank = _cluster_ranks(k, cfg.clusters)
+        return _select_ranked_clusters(rank, start, q, cfg.cluster_size) \
+            + i * cfg.n_local
+
+    return jax.vmap(per_range)(jnp.arange(cfg.g), keys)
+
+
+def partition_rescale_constants(cfg: SampleConfig) -> Tuple[float, float]:
+    """(1/p_cross_cluster, 1/p_cross_range) — the Eq. 23 conditional pair
+    inclusions of partition sampling. Within a chosen cluster both
+    endpoints always co-occur (p = 1, no rescale); same range across
+    clusters p = (q-1)/(C-1); across ranges p = q/C = b/n_local (ranges
+    sample independently). At q == 1 cross-cluster pairs NEVER co-occur —
+    the Cluster-GCN regime where cross-cluster edges are dropped — and the
+    rescale is 0 (the estimator stays unbiased over the edges it can see;
+    documented in the README mode matrix)."""
+    C, q = cfg.clusters, cfg.clusters_per_step
+    inv_cc = (C - 1) / (q - 1) if q > 1 else 0.0
+    inv_cr = C / q
+    return inv_cc, inv_cr
+
+
+def partition_col_scale(ids_r: jax.Array, ids_c: jax.Array,
+                        row_range: jax.Array, col_range: jax.Array,
+                        cfg: SampleConfig,
+                        inv_cc: float, inv_cr: float) -> jax.Array:
+    """The (b_r, b_c) per-pair rescale of partition mode: 1 within a
+    cluster, ``inv_cc`` across clusters of the same range, ``inv_cr``
+    across ranges. ``ids_*`` are global vertex ids; the cluster of an id
+    is positional (``local_id // cluster_size`` — clusters are contiguous
+    after the locality reordering). ``row_range``/``col_range`` may be
+    traced (``jax.lax.axis_index`` inside shard_map). Consumed by the
+    extraction's 2D ``rescale_offdiag`` path (``resc[own, pos]``)."""
+    cs = cfg.cluster_size
+    cl_r = (ids_r % cfg.n_local) // cs
+    cl_c = (ids_c % cfg.n_local) // cs
+    same_range = row_range == col_range
+    same_cl = jnp.logical_and(same_range, cl_r[:, None] == cl_c[None, :])
+    return jnp.where(same_cl, 1.0, jnp.where(same_range, inv_cc, inv_cr))
+
+
+def sample_walk_stratified(key: jax.Array, cfg: SampleConfig,
+                           walk_nbr: jax.Array,
+                           t: jax.Array | None = None) -> jax.Array:
+    """Walk mode: per range, ``walk_roots`` root vertices (permutation head
+    per step, or slice ``t`` under the epoch schedule — every vertex roots
+    a walk once per ``n_local/walk_roots`` steps) each walk ``walk_len``
+    steps over ``walk_nbr``, a REPLICATED (n_pad, walk_k) table of
+    IN-RANGE neighbor ids (global; built by
+    ``graphs.partition.build_walk_tables`` — vertices with no in-range
+    neighbor self-loop). The visited multiset is deduplicated to exactly
+    ``b`` distinct ids with random fill, static shapes throughout:
+    first-visit order gets priority scores, unvisited vertices
+    permutation-rank scores, and the b smallest win. Returns (g, b)
+    global ids, sorted within each range."""
+    n_loc, b = cfg.n_local, cfg.b_local
+    L = cfg.walk_len
+    n_roots = cfg.walk_roots
+    keys = jax.random.split(key, cfg.g)
+
+    def per_range(i, k):
+        k_root, k_walk = jax.random.split(k)
+        perm = jax.random.permutation(k_root, n_loc)
+        if t is None:
+            roots = perm[:n_roots]
+        else:
+            start = jnp.asarray(t, jnp.int32) * n_roots
+            roots = jax.lax.dynamic_slice(perm, (start,), (n_roots,))
+        roots = roots + i * n_loc                    # global, range i
+        visited = [roots]
+        cur = roots
+        for step in range(L):
+            kk = jax.random.fold_in(k_walk, step)
+            choice = jax.random.randint(kk, (n_roots,), 0, cfg.walk_k)
+            cur = walk_nbr[cur, choice]              # local gather: the
+            visited.append(cur)                      # table is replicated
+        vis = jnp.stack(visited).reshape(-1) - i * n_loc     # (b,) local
+        # dedup-with-fill: visited ids score their first-visit order
+        # (< b), unvisited ids n_loc + permutation rank; the b smallest
+        # scores are b DISTINCT local ids (scores are per-vertex).
+        rank = jnp.zeros((n_loc,), jnp.int32).at[perm].set(
+            jnp.arange(n_loc, dtype=jnp.int32))
+        score = rank + n_loc
+        score = score.at[vis].min(jnp.arange(b, dtype=jnp.int32))
+        ids = jnp.sort(jax.lax.top_k(-score, b)[1])
+        return ids + i * n_loc
+
+    return jax.vmap(per_range)(jnp.arange(cfg.g), keys)
+
+
+def walk_col_scale(ids_r: jax.Array, ids_c: jax.Array,
+                   p_incl: jax.Array) -> jax.Array:
+    """The (b_r, b_c) SAINT edge rescale: 1/q_uv with q_uv = p_u + p_v -
+    p_u p_v (union bound of the marginal inclusion estimates; Zeng et al.
+    2019 Eq. 6 normalization, applied post-extraction like the node-sample
+    baseline's q matrix). ``p_incl`` is the replicated (n_pad,) per-vertex
+    inclusion estimate (degree-proportional — the walk's stationary
+    distribution — capped at 1; built by ``build_walk_tables``). Self-loops
+    are exempted downstream by ``is_diag_block`` (Eq. 24 convention)."""
+    pr = p_incl[ids_r]
+    pc = p_incl[ids_c]
+    q = pr[:, None] + pc[None, :] - pr[:, None] * pc[None, :]
+    return 1.0 / jnp.maximum(q, 1e-6)
+
+
+# ---------------------------------------------------------------------------
 # Induced-subgraph extraction (Alg. 2 phases 2-4), vectorized, static shapes
 # ---------------------------------------------------------------------------
 
@@ -218,15 +514,22 @@ def _extract_triples(rp, ci, val, rows_local, cols_local, e_cap):
 def _edge_scale(rows_local, own, pos, col, rescale_offdiag, is_diag_block):
     """Phase-4 rescale factor per extracted slot (Eq. 24).
 
-    ``rescale_offdiag`` is a scalar (one inclusion probability, Eq. 23) or a
+    ``rescale_offdiag`` is a scalar (one inclusion probability, Eq. 23), a
     (b_c,) per-column array (serving: requested at p=1, support at
-    p_support). ``is_diag_block`` marks that the row/column vertex sets
-    coincide, so self-loops (local ids equal) stay unrescaled; it may be a
-    python bool or a traced scalar (``jax.lax.axis_index`` comparisons
-    inside shard_map).
+    p_support), or a (b_r, b_c) per-pair matrix (partition mode's
+    cluster-level constants, walk mode's SAINT q_uv — indexed at
+    ``[own, pos]``). ``is_diag_block`` marks that the row/column vertex
+    sets coincide, so self-loops (local ids equal) stay unrescaled; it may
+    be a python bool or a traced scalar (``jax.lax.axis_index``
+    comparisons inside shard_map).
     """
     resc = jnp.asarray(rescale_offdiag, dtype=jnp.float32)
-    offdiag = resc[pos] if resc.ndim == 1 else resc
+    if resc.ndim == 2:
+        offdiag = resc[own, pos]
+    elif resc.ndim == 1:
+        offdiag = resc[pos]
+    else:
+        offdiag = resc
     diag = jnp.logical_and(is_diag_block, rows_local[own] == col)
     return jnp.where(diag, 1.0, offdiag)
 

@@ -19,7 +19,8 @@ from repro.graphs.partition import (
     PartitionedGraph,
     build_partitioned_graph,
 )
-from repro.graphs.datasets import DATASETS, DatasetMeta, get_dataset
+from repro.graphs.datasets import (DATASETS, DatasetMeta, MmapShardedCSR,
+                                   get_dataset, write_mmap_shards)
 
 __all__ = [
     "CSRMatrix", "coo_to_csr", "csr_to_dense", "add_self_loops",
@@ -29,4 +30,5 @@ __all__ = [
     "block_ranges", "partition_csr_2d", "PartitionedGraph",
     "build_partitioned_graph",
     "DATASETS", "DatasetMeta", "get_dataset",
+    "MmapShardedCSR", "write_mmap_shards",
 ]

@@ -55,6 +55,27 @@ def build_argparser() -> argparse.ArgumentParser:
                          "dp); 'epoch': without-replacement — one "
                          "permutation per (seed, epoch, dp), step t takes "
                          "slice t (still communication-free)")
+    ap.add_argument("--sample-kind", default="stratified",
+                    choices=["stratified", "partition", "walk"],
+                    help="sampling family (all communication-free): "
+                         "'stratified' per-range uniform vertices (Alg. 1); "
+                         "'partition' whole locality clusters (Cluster-GCN "
+                         "— smaller support pool, cheaper extraction); "
+                         "'walk' GraphSAINT random-walk batches")
+    ap.add_argument("--clusters", type=int, default=0,
+                    help="partition kind: locality clusters per vertex "
+                         "range (0 with --sample-kind partition defaults "
+                         "to n_local/batch-per-range sized clusters)")
+    ap.add_argument("--walk-len", type=int, default=4,
+                    help="walk kind: steps per root walk")
+    ap.add_argument("--walk-k", type=int, default=8,
+                    help="walk kind: neighbor-table width (degree cap)")
+    ap.add_argument("--mmap-dir", default=None, metavar="DIR",
+                    help="ingest the graph from an MmapShardedCSR shard "
+                         "set (write one with repro.graphs.datasets."
+                         "write_mmap_shards) instead of materializing a "
+                         "synthetic dataset in memory; overrides "
+                         "--dataset/--vertices")
     ap.add_argument("--lr", type=float, default=5e-3)
     ap.add_argument("--dropout", type=float, default=0.2)
     ap.add_argument("--bf16-collectives", action="store_true")
@@ -87,6 +108,10 @@ def build_argparser() -> argparse.ArgumentParser:
                     help="optimizer steps per lax.scan dispatch")
     ap.add_argument("--target-acc", type=float, default=None)
     ap.add_argument("--eval-every", type=int, default=25)
+    ap.add_argument("--eval-every-epochs", type=int, default=None,
+                    help="evaluate every N epochs instead of every "
+                         "--eval-every steps (bit-identical to the step "
+                         "form at N * steps-per-epoch)")
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--ckpt-every", type=int, default=0,
                     help="steps between full-state checkpoints (0 = only "
@@ -124,9 +149,30 @@ def main(argv=None):
         f"need {n_need} devices; set XLA_FLAGS="
         f"--xla_force_host_platform_device_count={n_need}")
 
-    ds = get_dataset(args.dataset, scale_vertices=args.vertices,
-                     seed=args.seed)
-    pg = build_partitioned_graph(ds, g=args.g)
+    if args.mmap_dir:
+        from repro.graphs.datasets import MmapShardedCSR
+        shards = MmapShardedCSR.open(args.mmap_dir)
+        assert shards.meta["g"] == args.g, (
+            f"shard set {args.mmap_dir} was written for g="
+            f"{shards.meta['g']}, not --g {args.g}")
+        pg = shards.to_partitioned_graph()
+        ds_name, num_edges = shards.meta["name"], shards.meta["nnz"]
+    else:
+        ds = get_dataset(args.dataset, scale_vertices=args.vertices,
+                         seed=args.seed)
+        clusters = args.clusters
+        if args.sample_kind == "partition" and clusters == 0:
+            # default: the largest q in {8,4,2,1} that tiles the per-range
+            # batch, cluster size b_local/q, count rounded so the epoch
+            # schedule's dp-disjoint slicing divides evenly
+            b_loc = args.batch // args.g
+            q = next(q for q in (8, 4, 2, 1) if b_loc % q == 0)
+            cs = b_loc // q
+            n_loc0 = -(-ds.num_vertices // args.g)
+            clusters = -(-(-(-n_loc0 // cs)) // (q * args.gd)) \
+                * (q * args.gd)
+        pg = build_partitioned_graph(ds, g=args.g, clusters=clusters)
+        ds_name, num_edges = ds.name, ds.num_edges
     cfg = GM.GCNConfig(
         d_in=pg.feature_dim, d_hidden=args.d_hidden,
         num_layers=args.layers, num_classes=pg.num_classes,
@@ -138,7 +184,8 @@ def main(argv=None):
         reshard_impl=args.reshard, overlap_impl=args.overlap,
         compress=args.compress, compress_schedule=args.compress_schedule,
         dropout=args.dropout, seed=args.seed,
-        sample_mode=args.sample_mode)
+        sample_mode=args.sample_mode, sample_kind=args.sample_kind,
+        clusters=args.clusters, walk_len=args.walk_len, walk_k=args.walk_k)
     plan = fourd.build_plan(pg, cfg, mesh, batch=args.batch, opts=opts)
 
     graph = plan.shard_graph(pg)
@@ -156,7 +203,9 @@ def main(argv=None):
     loop = TrainLoopConfig(
         total_steps=None if args.epochs is not None else args.steps,
         epochs=args.epochs, chunk_size=args.chunk_size,
-        prefetch=args.prefetch, eval_every=args.eval_every,
+        prefetch=args.prefetch,
+        eval_every=None if args.eval_every_epochs else args.eval_every,
+        eval_every_epochs=args.eval_every_epochs,
         target_acc=args.target_acc, ckpt_dir=args.ckpt_dir,
         ckpt_every=args.ckpt_every, async_ckpt=not args.sync_ckpt)
     # one tracer for the whole run: library phases (sample/extract/engine)
@@ -179,9 +228,9 @@ def main(argv=None):
         state = restored
         print(f"resumed: step {int(state.step)} epoch {int(state.epoch)}")
 
-    print(f"ScaleGNN 4D: mesh {dict(mesh.shape)}  dataset {ds.name} "
-          f"N={pg.n} E={ds.num_edges} batch={args.batch} "
-          f"sample-mode={args.sample_mode} "
+    print(f"ScaleGNN 4D: mesh {dict(mesh.shape)}  dataset {ds_name} "
+          f"N={pg.n} E={num_edges} batch={args.batch} "
+          f"sample-kind={args.sample_kind} sample-mode={args.sample_mode} "
           f"steps={total_steps} (epochs={args.epochs}, "
           f"{plan.scfg.steps_per_epoch}/epoch) "
           f"prefetch={args.prefetch} chunk={args.chunk_size}")
@@ -216,9 +265,10 @@ def main(argv=None):
     if args.metrics_json:
         doc = {
             "run": {
-                "dataset": ds.name, "mesh": dict(mesh.shape),
+                "dataset": ds_name, "mesh": dict(mesh.shape),
                 "batch": args.batch, "steps": total_steps,
                 "sample_mode": args.sample_mode,
+                "sample_kind": args.sample_kind,
                 "prefetch": args.prefetch, "chunk_size": args.chunk_size,
                 "final_acc": acc, "wall_s": dt,
             },

@@ -82,8 +82,8 @@ class TrainLoopConfig:
     total_steps: Optional[int] = None
     chunk_size: int = 8        # optimizer steps per lax.scan dispatch
     prefetch: bool = False     # §V-A: fold the sampling carry into the scan
-    eval_every: int = 0        # steps between evals (0 = never), rounded
-                               # up to the enclosing chunk boundary
+    eval_every: Optional[int] = 0   # steps between evals (0/None = never),
+                               # rounded up to the enclosing chunk boundary
     target_acc: Optional[float] = None   # stop once an eval reaches this
     ckpt_dir: Optional[str] = None
     ckpt_every: int = 0        # steps between full-state saves (0 = only
@@ -91,6 +91,11 @@ class TrainLoopConfig:
                                # enclosing chunk boundary
     epochs: Optional[int] = None         # alternative to total_steps
     async_ckpt: bool = True    # overlap mid-run saves with the next chunk
+    # epoch-parameterized eval cadence: evaluate every N epochs. The
+    # resolved cadence is N * plan.scfg.steps_per_epoch — BIT-IDENTICAL to
+    # passing that product as eval_every (mirrors optim/schedules.py's
+    # epoch forms). Mutually exclusive with a nonzero eval_every.
+    eval_every_epochs: Optional[int] = None
 
     def __post_init__(self):
         assert (self.total_steps is None) != (self.epochs is None), (
@@ -100,8 +105,16 @@ class TrainLoopConfig:
         else:
             assert self.epochs >= 0
         assert self.chunk_size > 0
-        assert self.target_acc is None or self.eval_every > 0, (
-            "target_acc is only checked at eval boundaries; set eval_every")
+        if self.eval_every_epochs is not None:
+            assert self.eval_every_epochs > 0, (
+                "eval_every_epochs must be a positive epoch count")
+            assert not self.eval_every, (
+                "give the eval cadence as eval_every (steps) OR "
+                "eval_every_epochs, not both")
+        assert self.target_acc is None or self.eval_every \
+            or self.eval_every_epochs, (
+                "target_acc is only checked at eval boundaries; set "
+                "eval_every or eval_every_epochs")
 
 
 @dataclasses.dataclass
@@ -145,6 +158,11 @@ class Trainer:
         self.steps_per_epoch = plan.scfg.steps_per_epoch
         self.total_steps = (loop.total_steps if loop.total_steps is not None
                             else loop.epochs * self.steps_per_epoch)
+        # the ONE resolved eval cadence in steps (0 = never): the epoch
+        # form is exactly its step equivalent
+        self.eval_every = (loop.eval_every_epochs * self.steps_per_epoch
+                           if loop.eval_every_epochs is not None
+                           else (loop.eval_every or 0))
         if loop.prefetch:
             self._sample_fn, self._mb_loss_fn = PL.make_pipeline_fns(plan)
         else:
@@ -383,7 +401,8 @@ class Trainer:
         done = int(state.step)
         start_step = done
         # boundaries already behind a resumed state are not re-run
-        eval_mark = done // loop.eval_every if loop.eval_every else 0
+        eval_every = self.eval_every
+        eval_mark = done // eval_every if eval_every else 0
         ckpt_mark = done // loop.ckpt_every if loop.ckpt_every else 0
         saved_at = None         # step of the newest (possibly async) save
         device_losses = []      # per-chunk device arrays; materialized once
@@ -400,8 +419,8 @@ class Trainer:
             done += n
             device_losses.append(losses)
 
-            if loop.eval_every and done // loop.eval_every > eval_mark:
-                eval_mark = done // loop.eval_every
+            if eval_every and done // eval_every > eval_mark:
+                eval_mark = done // eval_every
                 with tr.span("eval"):
                     acc = float(self.eval_fn(state.params, graph))   # ONCE
                 log.evals.append((done, acc))

@@ -447,6 +447,134 @@ print("PASS", losses, "reshard_ratio", ratio)
 
 
 @pytest.mark.slow
+def test_partition_mode_communication_free_and_dp_disjoint():
+    """ISSUE-9 acceptance on the real (2,2,2)x2 mesh: partition-mode
+    sampling (epoch schedule) compiles to ZERO collectives, every device
+    of a DP group derives the identical cluster slice, the two DP groups'
+    slices are disjoint and jointly cover every vertex exactly once per
+    epoch, the tightened e_cap is strictly below the uniform bound, and a
+    2-epoch Trainer run (prefetch on, crossing the boundary in-scan)
+    bit-matches prefetch off."""
+    _run("""
+import numpy as np, jax, jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+from repro.graphs import make_synthetic_dataset, build_partitioned_graph
+from repro.core import fourd, pipeline as PL, gcn_model as M
+from repro.core.compat import shard_map
+from repro.obs import assert_no_collectives
+from repro.optim import AdamW
+from repro.train import Trainer, TrainLoopConfig
+ds = make_synthetic_dataset(n=512, num_classes=4, d_in=16, avg_degree=8,
+                            seed=0)
+pg = build_partitioned_graph(ds, g=2, clusters=16)   # cluster_size 16
+cfg = M.GCNConfig(d_in=16, d_hidden=32, num_layers=3, num_classes=4,
+                  dropout=0.0)
+mesh = fourd.make_mesh_4d(2, 2)
+opts = fourd.TrainOptions(sample_kind="partition", sample_mode="epoch",
+                          clusters=16)
+plan = fourd.build_plan(pg, cfg, mesh, batch=128, opts=opts)
+assert plan.scfg.dp_groups == 2 and plan.scfg.clusters_per_step == 4
+assert plan.scfg.e_cap < 64 * pg.max_block_row_nnz   # tightened bound
+spe = plan.scfg.steps_per_epoch
+assert spe == 2                                      # 512 / (128 * 2)
+graph = plan.shard_graph(pg)
+builder = plan.builder
+
+def local_ids(step, epoch):
+    s2d = builder.sample_ids(step, epoch, jax.lax.axis_index("d"))
+    return s2d[None, None, None, None]
+ids_fn = shard_map(local_ids, mesh=plan.mesh, in_specs=(P(), P()),
+                   out_specs=P("d", "x", "y", "z"), check_vma=False)
+per_epoch = []
+for t in range(spe):
+    ids = np.array(ids_fn(jnp.asarray(t), jnp.asarray(0)))
+    flat = ids.reshape(2, 8, -1)
+    for d in range(2):               # identical within each DP group
+        assert (flat[d] == flat[d][0]).all(), (t, d)
+    assert not np.intersect1d(flat[0][0], flat[1][0]).size, t  # disjoint
+    per_epoch.append(flat[:, 0])
+got = np.sort(np.concatenate([e.reshape(-1) for e in per_epoch]))
+assert (got == np.arange(512)).all()     # jointly cover, exactly once
+
+sample_fn, _ = PL.make_pipeline_fns(plan)
+assert_no_collectives(sample_fn, graph, jnp.asarray(0), jnp.asarray(0),
+                      what="partition-mode sampling")
+plan_s = fourd.build_plan(pg, cfg, mesh, batch=128,
+    opts=fourd.TrainOptions(sample_kind="partition", clusters=16))
+sample_s, _ = PL.make_pipeline_fns(plan_s)
+assert_no_collectives(sample_s, plan_s.shard_graph(pg), jnp.asarray(0),
+                      jnp.asarray(0), what="partition step-mode sampling")
+
+opt = AdamW(lr=5e-3)
+mk = lambda: plan.shard_params(M.init_params(jax.random.PRNGKey(1), cfg))
+loss_seqs = {}
+for pf in (False, True):
+    tr = Trainer(plan, opt, TrainLoopConfig(epochs=2, chunk_size=3,
+                                            prefetch=pf))
+    state, log = tr.run(tr.init_state(mk(), graph), graph)
+    assert int(state.step) == 2 * spe and int(state.epoch) == 2
+    loss_seqs[pf] = log.losses
+assert loss_seqs[True] == loss_seqs[False], loss_seqs
+assert all(np.isfinite(loss_seqs[True]))
+print("PASS")
+""")
+
+
+@pytest.mark.slow
+def test_walk_mode_communication_free():
+    """Walk (GraphSAINT) mode on the real mesh: the replicated neighbor
+    table keeps walk gathers device-local — the sampling program compiles
+    to ZERO collectives — every device of a DP group derives the same
+    batch, and a short train run moves finite losses."""
+    _run("""
+import numpy as np, jax, jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+from repro.graphs import make_synthetic_dataset, build_partitioned_graph
+from repro.core import fourd, pipeline as PL, gcn_model as M
+from repro.core.compat import shard_map
+from repro.obs import assert_no_collectives
+from repro.optim import AdamW
+ds = make_synthetic_dataset(n=512, num_classes=4, d_in=16, avg_degree=8,
+                            seed=0)
+pg = build_partitioned_graph(ds, g=2)
+cfg = M.GCNConfig(d_in=16, d_hidden=32, num_layers=3, num_classes=4,
+                  dropout=0.0)
+mesh = fourd.make_mesh_4d(2, 2)
+opts = fourd.TrainOptions(sample_kind="walk", walk_len=3, walk_k=8)
+plan = fourd.build_plan(pg, cfg, mesh, batch=128, opts=opts)
+assert plan.scfg.walk_roots == 16                    # 64 / (3 + 1)
+graph = plan.shard_graph(pg)
+assert set(graph["walk"]) == {"nbr", "p"}
+
+sample_fn, _ = PL.make_pipeline_fns(plan)
+assert_no_collectives(sample_fn, graph, jnp.asarray(0), jnp.asarray(0),
+                      what="walk-mode sampling")
+
+builder = plan.builder
+def local_ids(step, epoch, aux):
+    s2d = builder.sample_ids(step, epoch, jax.lax.axis_index("d"), aux=aux)
+    return s2d[None, None, None, None]
+ids_fn = shard_map(local_ids, mesh=plan.mesh,
+                   in_specs=(P(), P(), plan.aux_specs),
+                   out_specs=P("d", "x", "y", "z"), check_vma=False)
+ids = np.array(ids_fn(jnp.asarray(0), jnp.asarray(0),
+                      graph["walk"])).reshape(2, 8, -1)
+for d in range(2):
+    assert (ids[d] == ids[d][0]).all(), d            # identical per group
+assert not (ids[0][0] == ids[1][0]).all()            # groups independent
+
+opt = AdamW(lr=5e-3)
+params = plan.shard_params(M.init_params(jax.random.PRNGKey(1), cfg))
+ts = fourd.make_train_step(plan, opt)
+o = opt.init(params)
+for s in range(2):
+    params, o, loss = ts(params, o, graph, jnp.asarray(s))
+    assert np.isfinite(float(loss)), s
+print("PASS")
+""", timeout=900)
+
+
+@pytest.mark.slow
 def test_block_ell_spmm_path_matches_dense():
     """§Perf H3.4: the block-ELL extraction + Pallas SpMM path produces
     the same distributed loss and gradients as the dense-block path."""

@@ -5,6 +5,8 @@ from repro.graphs import (add_self_loops, build_partitioned_graph, coo_to_csr,
                           csr_to_dense, csr_transpose, get_dataset,
                           make_synthetic_dataset, sym_normalize)
 from repro.graphs.csr import make_undirected
+from repro.graphs.partition import (locality_order, max_cluster_block_nnz,
+                                    permute_csr)
 
 
 def test_coo_to_csr_roundtrip(rng):
@@ -79,6 +81,79 @@ def test_partition_roundtrip(small_dataset, g):
     n = small_dataset.num_vertices
     assert np.allclose(R[:n, :n], D, atol=1e-6)
     # ghosts have no edges
+    assert np.all(R[n:, :] == 0) and np.all(R[:, n:] == 0)
+
+
+def test_locality_order_is_permutation_and_permute_is_symmetric(
+        small_dataset):
+    A = small_dataset.adj_norm
+    order = locality_order(A)
+    assert np.array_equal(np.sort(order), np.arange(A.n_rows))
+    B = permute_csr(A, order)
+    D = csr_to_dense(A)
+    # symmetric permutation: new id k is old vertex order[k]
+    assert np.allclose(csr_to_dense(B), D[np.ix_(order, order)], atol=1e-6)
+
+
+def test_locality_order_concentrates_diagonal(small_dataset):
+    """The point of the BFS reordering: after it, contiguous id spans
+    (the clusters) hold more of their own edges. Measured as the nnz
+    fraction inside diagonal cluster x cluster blocks — must beat the
+    original vertex order."""
+    A = small_dataset.adj_norm
+    cs = 32
+
+    def diag_fraction(M):
+        D = csr_to_dense(M)
+        n = D.shape[0]
+        tot = (D != 0).sum()
+        own = sum(((D[i:i + cs, i:i + cs]) != 0).sum()
+                  for i in range(0, n, cs))
+        return own / tot
+
+    before = diag_fraction(A)
+    after = diag_fraction(permute_csr(A, locality_order(A)))
+    assert after > before, (before, after)
+
+
+def test_max_cluster_block_nnz_matches_bruteforce(rng):
+    g, n_local, clusters = 2, 12, 3
+    counts = rng.integers(0, 5, size=(g, g, n_local))
+    block_rp = np.zeros((g, g, n_local + 1), np.int64)
+    np.cumsum(counts, axis=2, out=block_rp[:, :, 1:])
+    cs = n_local // clusters
+    ref = max(counts[i, j, c * cs:(c + 1) * cs].sum()
+              for i in range(g) for j in range(g) for c in range(clusters))
+    assert max_cluster_block_nnz(block_rp, clusters) == int(ref)
+
+
+def test_build_partitioned_graph_with_clusters(small_dataset):
+    """clusters > 0: BFS-reordered blocks, n_local padded so the clusters
+    tile it, data arrays permuted consistently with the adjacency."""
+    pg = build_partitioned_graph(small_dataset, g=2, clusters=16)
+    assert pg.clusters == 16 and pg.n_local % 16 == 0
+    assert pg.cluster_size == pg.n_local // 16
+    # a cluster's nnz bound dominates any single row's within the block
+    assert pg.max_cluster_block_nnz >= pg.max_block_row_nnz > 0
+
+    order = locality_order(small_dataset.adj_norm)   # deterministic
+    n = small_dataset.num_vertices
+    assert np.allclose(pg.features[:n],
+                       np.asarray(small_dataset.features)[order])
+    assert np.array_equal(pg.labels[:n],
+                          np.asarray(small_dataset.labels)[order])
+    # blocks reconstruct the PERMUTED adjacency
+    D = csr_to_dense(small_dataset.adj_norm)[np.ix_(order, order)]
+    n_l = pg.n_local
+    R = np.zeros((pg.n_pad, pg.n_pad), np.float32)
+    for i in range(pg.g):
+        for j in range(pg.g):
+            rp, ci, v = (pg.block_rp[i, j], pg.block_ci[i, j],
+                         pg.block_val[i, j])
+            for r in range(n_l):
+                s, e = rp[r], rp[r + 1]
+                R[i * n_l + r, j * n_l + ci[s:e]] = v[s:e]
+    assert np.allclose(R[:n, :n], D, atol=1e-6)
     assert np.all(R[n:, :] == 0) and np.all(R[:, n:] == 0)
 
 
