@@ -15,7 +15,7 @@ import subprocess
 import sys
 
 BENCHMARKS = [
-    # (module, device_count, description)
+    # (module, device_count, description[, extra argv])
     ("benchmarks.table1_sampling_accuracy", 1,
      "Table I: test accuracy — uniform vs GraphSAINT vs GraphSAGE"),
     ("benchmarks.fig5_optimizations", 8,
@@ -35,6 +35,10 @@ BENCHMARKS = [
     ("benchmarks.serve_bench", 8,
      "Serving: p50/p99 latency + req/s — naive vs micro-batched vs +cache "
      "vs (2,2,2)-mesh sharded"),
+    ("benchmarks.serve_bench", 1,
+     "LLM serving: tinyllama decode throughput through the slot-scheduled "
+     "driver — continuous vs static batching at staggered arrivals",
+     ["--model", "llm"]),
     ("benchmarks.ablation_sampling_modes", 1,
      "Ablation: exact vs stratified sampling vs no-rescale control"),
     ("benchmarks.locality_bench", 8,
@@ -65,14 +69,20 @@ def main() -> None:
     args = ap.parse_args()
 
     if args.list:
-        for module, n_dev, desc in BENCHMARKS:
+        for module, n_dev, desc, *extra in BENCHMARKS:
             dev = f"{n_dev} dev" if n_dev else "sub-runs"
-            print(f"{module:40s} [{dev:8s}] {desc}")
+            argv = " ".join(extra[0]) if extra else ""
+            print(f"{module:40s} [{dev:8s}] {desc}"
+                  + (f" ({argv})" if argv else ""))
         return
 
     if args.check_imports:
         import importlib
-        for module, _, _ in BENCHMARKS:
+        seen = set()
+        for module, _, _, *_ in BENCHMARKS:
+            if module in seen:
+                continue
+            seen.add(module)
             importlib.import_module(module)
             print(f"import ok: {module}")
         return
@@ -84,8 +94,10 @@ def main() -> None:
         os.makedirs(json_dir, exist_ok=True)
     all_rows = []
     failures = []
-    for module, n_dev, desc in BENCHMARKS:
-        if args.only and not any(o in module for o in args.only):
+    for module, n_dev, desc, *extra in BENCHMARKS:
+        argv = extra[0] if extra else []
+        if args.only and not any(o in module or o in " ".join(argv)
+                                 for o in args.only):
             continue
         print(f"\n=== {module} — {desc}", flush=True)
         env = dict(os.environ)
@@ -95,7 +107,7 @@ def main() -> None:
         if n_dev > 0:
             env["XLA_FLAGS"] = (
                 f"--xla_force_host_platform_device_count={n_dev}")
-        r = subprocess.run([sys.executable, "-m", module], env=env,
+        r = subprocess.run([sys.executable, "-m", module] + argv, env=env,
                            capture_output=True, text=True, timeout=3600)
         for line in r.stdout.splitlines():
             print(line, flush=True)

@@ -1,8 +1,14 @@
-"""Batched serving example: prefill a batch of prompts, then decode tokens
-with the per-family KV cache / SSM state machinery — the same code paths
-the decode_32k / long_500k dry-run shapes exercise.
+"""LLM serving example: drive autoregressive decoding through the SAME
+``ServingDriver`` that fronts GNN classification — prompts submitted from
+client code as futures, KV-cache slot scheduling + continuous batching
+behind the protocol seam.
 
-    PYTHONPATH=src python examples/serve_llm.py --arch mixtral-8x7b
+    PYTHONPATH=src python examples/serve_llm.py --arch tinyllama-1.1b
+
+``--legacy-loop`` runs the original hand-rolled batch prefill/decode loop
+instead; it remains the only path for families whose decode state is not
+slot-scheduled yet (ssm/hybrid/vlm/audio) and doubles as the golden
+reference the serving tests compare greedy outputs against.
 """
 import argparse
 import time
@@ -13,19 +19,11 @@ import numpy as np
 
 from repro.configs import ARCH_IDS, get_smoke
 from repro.models import transformer as T
+from repro.serve import LLMEngine, LLMServeOptions, ServingDriver
 
 
-def main():
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", default="mixtral-8x7b", choices=ARCH_IDS)
-    ap.add_argument("--batch", type=int, default=4)
-    ap.add_argument("--prompt-len", type=int, default=64)
-    ap.add_argument("--new-tokens", type=int, default=32)
-    args = ap.parse_args()
-
-    cfg = get_smoke(args.arch)
-    rng = np.random.default_rng(0)
-    params = T.init_params(jax.random.PRNGKey(0), cfg)
+def legacy_loop(cfg, params, args, rng):
+    """Static-batch prefill + decode with the scalar-pos cache API."""
     B, S = args.batch, args.prompt_len
     prompts = jnp.asarray(rng.integers(0, cfg.vocab, (B, S)), jnp.int32)
     mem = None
@@ -43,8 +41,7 @@ def main():
     t0 = time.time()
     logits, cache = prefill(params, prompts, mem)
     jax.block_until_ready(logits)
-    t_prefill = time.time() - t0
-    print(f"{cfg.name}: prefill {B}x{S} in {t_prefill*1e3:.1f} ms")
+    print(f"{cfg.name}: prefill {B}x{S} in {(time.time() - t0) * 1e3:.1f} ms")
 
     tok = jnp.argmax(logits[:, -1], axis=-1)[:, None].astype(jnp.int32)
     outs = [tok]
@@ -59,6 +56,54 @@ def main():
     print(f"decoded {args.new_tokens} tokens/seq in {dt*1e3:.1f} ms "
           f"({B * args.new_tokens / dt:.0f} tok/s batch throughput)")
     print("sample token ids:", gen[0][:16].tolist())
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="tinyllama-1.1b", choices=ARCH_IDS)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=64)
+    ap.add_argument("--new-tokens", type=int, default=32)
+    ap.add_argument("--slots", type=int, default=4,
+                    help="KV cache pool size (driver path)")
+    ap.add_argument("--legacy-loop", action="store_true",
+                    help="bypass the driver: hand-rolled batch loop "
+                         "(required for ssm/hybrid/vlm/audio families)")
+    args = ap.parse_args()
+
+    cfg = get_smoke(args.arch)
+    rng = np.random.default_rng(0)
+    params = T.init_params(jax.random.PRNGKey(0), cfg)
+
+    if args.legacy_loop or cfg.family not in ("dense", "moe"):
+        if not args.legacy_loop:
+            print(f"[{cfg.family} family has no slot scheduling yet; "
+                  f"falling back to --legacy-loop]")
+        legacy_loop(cfg, params, args, rng)
+        return
+
+    engine = LLMEngine(params, cfg, LLMServeOptions(
+        slots=args.slots, max_prompt_len=args.prompt_len,
+        max_new_tokens=args.new_tokens))
+    prompts = [rng.integers(0, cfg.vocab, args.prompt_len).tolist()
+               for _ in range(args.batch)]
+
+    t0 = time.time()
+    with ServingDriver(engine, starvation_ms=5.0) as drv:
+        futs = [drv.submit(p) for p in prompts]
+        outs = [f.result(timeout=120) for f in futs]
+        st = drv.stats()
+    dt = time.time() - t0
+
+    total = sum(len(o) for o in outs)
+    print(f"{cfg.name}: {args.batch} prompts x {args.prompt_len} tokens "
+          f"through ServingDriver ({args.slots} slots)")
+    print(f"generated {total} tokens in {dt*1e3:.1f} ms "
+          f"({total / dt:.0f} tok/s), "
+          f"prefills={st['prefills']} decode_steps={st['decode_steps']} "
+          f"occupancy={st['slot_occupancy']:.2f} "
+          f"decode_compiles={st['decode_compiles']}")
+    print("sample token ids:", np.asarray(outs[0])[:16].tolist())
 
 
 if __name__ == "__main__":

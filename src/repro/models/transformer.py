@@ -926,3 +926,146 @@ def _conv_tail(xn, mamba_p, cfg: ModelConfig):
     zxbcdt = xn @ mamba_p["in_proj"]
     xbc = zxbcdt[..., din:din + din + 2 * gn]
     return xbc[:, -(k - 1):, :]
+
+
+# ---------------------------------------------------------------------------
+# Slot-indexed decode cache — the serving pool API (serve/llm_engine.py)
+#
+# ``init_cache``/``prefill``/``decode_step`` above treat the batch dim as one
+# homogeneous request group sharing a scalar ``pos`` — fine for a static
+# batch, useless for continuous batching where every row is a different
+# request at a different depth. The slot API makes the batch dim a POOL of
+# independent cache slots: ``pos`` is a (slots,) vector, prompts prefill
+# into one slot at a traced index (so freed slots are reused mid-stream
+# without recompiling), and one decode step advances every active slot.
+# ---------------------------------------------------------------------------
+
+def init_slot_cache(cfg: ModelConfig, slots: int,
+                    max_len: int) -> Dict[str, Any]:
+    """A pooled decode cache: batch dim = scheduler slots, per-slot ``pos``.
+
+    Dense/MoE only — families carrying extra decode state (SSM/hybrid
+    recurrent states, VLM/audio cross-attention memory) need per-slot
+    handling of that state and are not wired up yet."""
+    if cfg.family not in ("dense", "moe"):
+        raise NotImplementedError(
+            f"slot-scheduled serving supports dense/moe families; "
+            f"{cfg.family!r} decode carries extra per-request state "
+            f"(use examples/serve_llm.py --legacy-loop)")
+    cache = init_cache(cfg, slots, max_len)
+    cache["pos"] = jnp.zeros((slots,), jnp.int32)
+    return cache
+
+
+def prefill_into_slot(params, tokens, length, cache, slot,
+                      cfg: ModelConfig):
+    """Prefill ONE prompt into cache slot ``slot``.
+
+    ``tokens`` is (1, Sp) right-padded to a static prompt capacity;
+    ``length`` (traced scalar) is the real prompt length; ``slot`` (traced
+    scalar) picks the pool row — one compiled program serves every slot.
+    Padded positions do write K/V rows, but decode masks each row's cache at
+    its own ``pos``, so they are never attended. Returns
+    ``(greedy_token (1,), last-real-position logits (1, 1, Vp), cache')``.
+    """
+    b, s = tokens.shape
+    assert b == 1, "one prompt per slot prefill"
+    t = cache["self_kv"]["k"].shape[2]
+    assert s <= t, (f"prompt capacity {s} exceeds KV cache length {t}; "
+                    f"windowed ring prefill is not supported in slot mode")
+    positions = jnp.arange(s)
+    h = _embed(params, tokens, cfg, positions)
+    theta = cfg.rope_theta
+    window = cfg.sliding_window
+
+    def project_kv(attn_p, hh):
+        _, k, v = L.attn_project_qkv(attn_p, hh, cfg.n_heads,
+                                     cfg.n_kv_heads, cfg.hd)
+        if theta is not None:
+            k = L.rope(k, positions, theta)
+        return k, v
+
+    def body(carry, blk):
+        hh = carry
+        xn = _norm(hh, blk["norm1"], cfg)
+        k, v = project_kv(blk["attn"], xn)
+        hh, _ = _dense_block(blk, hh, cfg, positions, window=window,
+                             rope_theta=theta)
+        return hh, (k, v)
+
+    h, (ks, vs) = jax.lax.scan(body, h, params["blocks"])
+    # ks: (L, 1, Sp, KV, hd) -> row `slot` of the (L, slots, T, KV, hd) pool
+    kv = cache["self_kv"]
+    kc = jax.lax.dynamic_update_slice(kv["k"], ks.astype(kv["k"].dtype),
+                                      (0, slot, 0, 0, 0))
+    vc = jax.lax.dynamic_update_slice(kv["v"], vs.astype(kv["v"].dtype),
+                                      (0, slot, 0, 0, 0))
+    cache = dict(cache, self_kv={"k": kc, "v": vc},
+                 pos=cache["pos"].at[slot].set(length))
+    h_last = jax.lax.dynamic_slice_in_dim(h, length - 1, 1, axis=1)
+    logits = _logits(params, h_last, cfg)
+    tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+    return tok, logits, cache
+
+
+def _attn_decode_slots(p, x, kv_layer, pos, cfg: ModelConfig, rope_theta):
+    """One-token attention with per-row positions ``pos`` (slots,)."""
+    b = x.shape[0]
+    q, k, v = L.attn_project_qkv(p, x, cfg.n_heads, cfg.n_kv_heads, cfg.hd)
+    if rope_theta is not None:
+        posv = pos[:, None]                      # (slots, 1) per-row
+        q = L.rope(q, posv, rope_theta)
+        k = L.rope(k, posv, rope_theta)
+    t = kv_layer["k"].shape[1]
+    # per-row scatter write; a full non-ring cache clamps to its last row (a
+    # finished slot's write is garbage the mask never exposes)
+    idx = (pos % t) if cfg.sliding_window is not None \
+        else jnp.minimum(pos, t - 1)
+    rows = jnp.arange(b)
+    kc = kv_layer["k"].at[rows, idx].set(k[:, 0])
+    vc = kv_layer["v"].at[rows, idx].set(v[:, 0])
+    # (slots, 1) cache_len broadcasts into decode_attention's (1, T) slot
+    # mask -> per-row validity
+    out = L.decode_attention(q, kc, vc, (pos + 1)[:, None],
+                             ring=cfg.sliding_window is not None)
+    return (out.reshape(b, 1, cfg.n_heads * cfg.hd) @ p["wo"],
+            {"k": kc, "v": vc})
+
+
+def decode_step_slots(params, token, cache, cfg: ModelConfig,
+                      active: jax.Array):
+    """One decode step over the whole slot pool.
+
+    ``token`` (slots, 1) is each slot's last token (garbage for free slots);
+    ``active`` (slots,) bool gates which slots advance: inactive rows
+    compute (cheap — they're along for the SIMD ride) but neither move their
+    ``pos`` nor have their output read by the scheduler. Returns
+    ``(greedy_tokens (slots,), logits (slots, 1, Vp), cache')``."""
+    b = token.shape[0]
+    pos = cache["pos"]                           # (slots,) per-row depth
+    positions = pos[:, None]
+    h = params["embed"][token].astype(cfg.compute_dtype)
+    if cfg.rope_theta is None:
+        h = h + _sinusoidal(positions, cfg.d_model).astype(h.dtype)
+    theta = cfg.rope_theta
+
+    def body(carry, xs):
+        hh = carry
+        blk, kv_layer = xs
+        a, newkv = _attn_decode_slots(
+            blk["attn"], _norm(hh, blk["norm1"], cfg), kv_layer, pos,
+            cfg, theta)
+        hh = hh + a
+        if "moe" in blk:
+            y, _ = M.moe_ffn(blk["moe"], _norm(hh, blk["norm2"], cfg), cfg)
+        else:
+            y = L.mlp_block(blk["mlp"], _norm(hh, blk["norm2"], cfg),
+                            cfg.mlp)
+        return hh + y, newkv
+
+    h, newkv = jax.lax.scan(body, h, (params["blocks"], cache["self_kv"]))
+    logits = _logits(params, h, cfg)
+    tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+    cache = dict(cache, self_kv=newkv,
+                 pos=pos + active.astype(jnp.int32))
+    return tok, logits, cache

@@ -1,26 +1,39 @@
-"""Online GNN inference: micro-batched, communication-free neighborhood
-assembly over a trained GCN (the serving counterpart of the 4D train loop).
+"""Online inference: one model-agnostic serving core, per-model backends.
 
+The generic half (``ServingCore`` + ``ServingDriver``) schedules any
+backend behind the ``serve/protocol.py`` seam; two backends exist:
+
+    # GNN vertex classification (micro-batched Alg.-2 assembly + 3D-PMM)
     engine = InferenceEngine(params, cfg, dataset.adj_norm,
                              dataset.features, ServeOptions())
     logits = engine.predict([17, 42, 1001])
+
+    # autoregressive decoding (KV-cache slot scheduling over models/)
+    llm = LLMEngine(params, model_cfg, LLMServeOptions(slots=8))
+    tokens = llm.generate([[1, 5, 9], [2, 7]])
 """
-from repro.serve.batcher import MicroBatch, MicroBatcher, WorkItem
+from repro.serve.batcher import (MicroBatch, MicroBatcher, RequestQueue,
+                                 WorkItem)
 from repro.serve.assembler import (AssemblySpec, BatchPlan, ShardedBatchPlan,
                                    assemble_dense_block, make_builder,
                                    make_spec, make_support_pool,
                                    make_support_pools, plan_batch,
                                    plan_batch_ranges)
 from repro.serve.cache import EmbeddingCache
-from repro.serve.driver import Overloaded, ServingDriver
-from repro.serve.engine import InferenceEngine, ServeOptions
+from repro.serve.core import ServingCore
+from repro.serve.driver import ServingDriver
+from repro.serve.engine import GNNBackend, InferenceEngine, ServeOptions
+from repro.serve.llm_engine import LLMBackend, LLMEngine, LLMServeOptions
+from repro.serve.protocol import Completion, EngineBackend, Overloaded
 
 __all__ = [
-    "MicroBatch", "MicroBatcher", "WorkItem",
+    "MicroBatch", "MicroBatcher", "RequestQueue", "WorkItem",
     "AssemblySpec", "BatchPlan", "ShardedBatchPlan",
     "assemble_dense_block", "make_builder", "make_spec",
     "make_support_pool", "make_support_pools", "plan_batch",
     "plan_batch_ranges",
-    "EmbeddingCache", "Overloaded", "ServingDriver",
-    "InferenceEngine", "ServeOptions",
+    "EmbeddingCache", "Overloaded", "ServingDriver", "ServingCore",
+    "Completion", "EngineBackend",
+    "GNNBackend", "InferenceEngine", "ServeOptions",
+    "LLMBackend", "LLMEngine", "LLMServeOptions",
 ]

@@ -1,12 +1,14 @@
 """Threaded continuous-batching driver: concurrent submitters, one engine.
 
-The :class:`~repro.serve.engine.InferenceEngine` is deliberately
-single-threaded and event-driven — nothing happens outside ``submit`` /
-``pump`` / ``drain``. Under concurrent load that leaves two gaps: (1) nobody
-calls ``pump`` while every client thread is blocked waiting for its own
-result, so deadline flushes never fire; (2) with ``mesh_dp`` stacking, a
-partially filled device group can sit staged while a full group's worth of
-traffic would arrive a moment later. The driver closes both:
+A :class:`~repro.serve.core.ServingCore` engine (GNN ``InferenceEngine``,
+LLM ``LLMEngine``, any backend behind the ``serve/protocol.py`` seam) is
+deliberately single-threaded and event-driven — nothing happens outside
+``submit`` / ``pump`` / ``drain``. Under concurrent load that leaves two
+gaps: (1) nobody calls ``pump`` while every client thread is blocked waiting
+for its own result, so deadline flushes never fire; (2) with ``mesh_dp``
+stacking, a partially filled device group can sit staged while a full
+group's worth of traffic would arrive a moment later. The driver closes
+both:
 
 * all engine access is serialized under one lock — any number of threads may
   ``submit`` concurrently and get a ``concurrent.futures.Future`` back;
@@ -16,6 +18,12 @@ traffic would arrive a moment later. The driver closes both:
   longer than ``starvation_ms``, the driver force-drains the engine —
   bounding worst-case latency below the per-item batcher deadline whenever
   that deadline is long (it exists to fill batches, not to park requests).
+
+When the backend reports ``busy()`` (active LLM decode slots), the pump
+loop skips its sleep — every pump retires one token per active sequence, so
+sleeping between them would serialize decoding against the poll interval —
+and the starvation drain is suppressed: a decoding request isn't starving,
+it's mid-generation.
 
 Results are routed back through futures, so submitter threads never poll:
 
@@ -28,13 +36,12 @@ from __future__ import annotations
 import threading
 import time
 from concurrent.futures import Future
-from typing import Dict, Optional, Sequence, Tuple
+from typing import Dict, Optional, Tuple
 
-from repro.serve.engine import InferenceEngine
+from repro.serve.core import ServingCore
+from repro.serve.protocol import Overloaded
 
-
-class Overloaded(RuntimeError):
-    """Raised by ``submit`` when the in-flight cap sheds the request."""
+__all__ = ["Overloaded", "ServingDriver"]
 
 
 class ServingDriver:
@@ -45,10 +52,10 @@ class ServingDriver:
     deterministic concurrency tests use to control interleaving exactly.
     """
 
-    def __init__(self, engine: InferenceEngine, *,
+    def __init__(self, engine: ServingCore, *,
                  starvation_ms: float = 25.0, poll_ms: float = 1.0,
                  auto: bool = True, max_inflight: int = 0):
-        assert not engine.opts.replay, (
+        assert not engine.replay, (
             "the driver uses real time; replay engines are driven directly")
         self._eng = engine
         self._starvation = starvation_ms / 1e3
@@ -70,9 +77,15 @@ class ServingDriver:
 
     # -- client API (any thread) --------------------------------------------
 
-    def submit(self, vertices: Sequence[int]) -> Future:
-        """Enqueue one classification request; the Future resolves to its
-        (k, num_classes) logits."""
+    def submit(self, payload, *,
+               deadline_ms: Optional[float] = None) -> Future:
+        """Enqueue one request; the Future resolves to the engine's output
+        (logits rows for the GNN, generated token ids for the LLM).
+
+        ``deadline_ms`` arms per-request shedding: if still incomplete that
+        long after submit, the engine fails it with :class:`Overloaded`
+        (delivered through the Future) instead of letting it age in the
+        queue."""
         fut: Future = Future()
         with self._lock:
             if self._stop.is_set():
@@ -86,7 +99,7 @@ class ServingDriver:
                 raise Overloaded(
                     f"{len(self._futures)} requests in flight "
                     f"(max_inflight={self._max_inflight})")
-            rid = self._eng.submit(vertices)
+            rid = self._eng.submit(payload, deadline_ms=deadline_ms)
             self._futures[rid] = (fut, time.monotonic())
             self.inflight_high_water = max(self.inflight_high_water,
                                            len(self._futures))
@@ -149,15 +162,19 @@ class ServingDriver:
     # -- internals ----------------------------------------------------------
 
     def _collect_locked(self) -> None:
-        for rid, logits in self._eng.take_completed().items():
+        for rid, result in self._eng.take_completed().items():
             entry = self._futures.pop(rid, None)
             if entry is not None:
-                entry[0].set_result(logits)
+                entry[0].set_result(result)
+        for rid, exc in self._eng.take_failed().items():
+            entry = self._futures.pop(rid, None)
+            if entry is not None:
+                entry[0].set_exception(exc)
 
     def _service_locked(self, now: float) -> None:
         self._eng.pump()
         self._collect_locked()       # deadline completions are not starving
-        if self._futures:
+        if self._futures and not self._eng.busy():
             oldest = min(t for _, t in self._futures.values())
             if now - oldest >= self._starvation:
                 # bound tail latency: don't let a sparse period park requests
@@ -174,8 +191,11 @@ class ServingDriver:
 
     def _loop(self) -> None:
         while not self._stop.is_set():
-            self._wake.wait(self._poll)
-            self._wake.clear()
+            # a busy backend (active decode slots) makes back-to-back pumps
+            # productive — don't put the poll interval between tokens
+            if not self._eng.busy():
+                self._wake.wait(self._poll)
+                self._wake.clear()
             try:
                 with self._lock:
                     self._service_locked(time.monotonic())

@@ -1,4 +1,4 @@
-"""Online GNN inference engine: submit/poll + synchronous predict.
+"""Online GNN inference: the classification backend of the serving core.
 
 One engine owns a trained GCN, the graph CSR, a micro-batcher, an optional
 embedding cache, and ONE jitted apply function — every micro-batch, whatever
@@ -18,12 +18,19 @@ outside ``submit``/``pump``/``poll``/``drain`` calls. In **replay mode** the
 clock is virtual (advanced only by ``advance()``/explicit ``now=``), so an
 identical request stream produces bit-identical outputs — the deterministic
 harness the tests rely on.
+
+Since the model-agnostic split, :class:`InferenceEngine` is
+``ServingCore`` (request table, clock, stats, deadline shedding —
+``serve/core.py``) over :class:`GNNBackend` (everything below this line:
+cache-hit admission, vertex micro-batching, dp staging, Alg.-2 planning and
+the single/3D-PMM forward). The batch math is untouched — outputs through
+the protocol seams are bit-identical to the pre-split engine.
 """
 from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Dict, List, Optional, Sequence
+from typing import Any, Dict, List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -31,10 +38,11 @@ import numpy as np
 
 from repro.core import gcn_model as M
 from repro.graphs.csr import CSRMatrix
-from repro.obs.metrics import LatencyHistogram
 from repro.serve import assembler as asm
 from repro.serve.batcher import MicroBatch, MicroBatcher
 from repro.serve.cache import EmbeddingCache
+from repro.serve.core import ServingCore
+from repro.serve.protocol import Completion, PendingRequest
 
 
 @dataclasses.dataclass(frozen=True)
@@ -71,20 +79,13 @@ class ServeOptions:
     force_distributed: bool = False
 
 
-class _Pending:
-    __slots__ = ("out", "remaining", "t_submit")
-
-    def __init__(self, k: int, dim: int, t_submit: float):
-        self.out = np.zeros((k, dim), np.float32)
-        self.remaining = k
-        self.t_submit = t_submit
-
-
-class InferenceEngine:
-    """Serve "classify these vertex IDs" requests against a trained GCN."""
+class GNNBackend:
+    """Vertex-classification backend: Alg.-2 assembly + int8 cache +
+    single-device or 3D-PMM forward. A "batch" at the protocol seam is one
+    dp GROUP — a list of :class:`MicroBatch` served by ONE device call."""
 
     def __init__(self, params, cfg: M.GCNConfig, A: CSRMatrix,
-                 features: np.ndarray, options: ServeOptions = ServeOptions(),
+                 features: np.ndarray, options: ServeOptions,
                  e_cap: Optional[int] = None):
         self.cfg = cfg
         self.opts = options
@@ -95,10 +96,6 @@ class InferenceEngine:
         self._cache = (EmbeddingCache(options.cache_capacity,
                                       options.cache_quantize)
                        if options.use_cache else None)
-        self._requests: Dict[int, _Pending] = {}
-        self._done: Dict[int, np.ndarray] = {}
-        self._next_id = 0
-        self._vnow = 0.0                       # virtual clock (replay mode)
 
         g3 = tuple(options.mesh_shape)
         assert len(g3) == 3 and g3[0] == g3[1] == g3[2] >= 1, (
@@ -154,56 +151,26 @@ class InferenceEngine:
 
             self._fwd = jax.jit(fwd)
 
-        # counters. Latencies go into a bounded-memory streaming histogram
-        # (exact-merging log buckets) instead of an unbounded list — the
-        # engine is meant to survive millions of requests.
-        self.completed = 0
         self.device_calls = 0
-        self.latencies = LatencyHistogram()
         self.queue_high_water = 0      # max items pending in the batcher
         self._slots_filled = 0         # requested vertices actually batched
         self._slots_total = 0          # slot capacity of every batch run
-        self._t_first: Optional[float] = None
-        self._t_last: Optional[float] = None
 
-    # -- clock ---------------------------------------------------------------
+    # -- protocol ------------------------------------------------------------
 
-    def _now(self, now: Optional[float]) -> float:
-        # caller-supplied timestamps are honored only in replay mode; in
-        # live mode everything is stamped with one monotonic clock so
-        # latency stats and batcher deadlines never mix time bases
-        if not self.opts.replay:
-            return time.monotonic()
-        if now is not None:
-            self._vnow = max(self._vnow, now)
-            return now
-        return self._vnow
+    def capacity(self) -> int:
+        return self.spec.slots
 
-    def advance(self, dt: float) -> float:
-        """Advance the virtual clock (replay mode only)."""
-        assert self.opts.replay, "advance() is for replay mode"
-        self._vnow += dt
-        return self._vnow
-
-    # -- request API ---------------------------------------------------------
-
-    def submit(self, vertices: Sequence[int],
-               now: Optional[float] = None) -> int:
-        """Enqueue one classification request; returns its request id.
-
-        ``now`` is honored only in replay mode (virtual clock); a live
-        engine stamps everything with its own monotonic clock."""
-        now = self._now(now)
-        vertices = [int(v) for v in vertices]
+    def validate(self, payload: Sequence[int]) -> None:
+        vertices = [int(v) for v in payload]
         assert vertices, "empty request"
         assert all(0 <= v < self.spec.n for v in vertices), "vertex oob"
-        rid = self._next_id
-        self._next_id += 1
-        req = _Pending(len(vertices), self.cfg.num_classes, now)
-        self._requests[rid] = req
-        if self._t_first is None:
-            self._t_first = now if self.opts.replay else time.monotonic()
 
+    def new_request(self, payload: Sequence[int]) -> np.ndarray:
+        return np.zeros((len(payload), self.cfg.num_classes), np.float32)
+
+    def admit(self, req: PendingRequest, now: float) -> List[Any]:
+        vertices = [int(v) for v in req.payload]
         # cache hits are served at submit time and never occupy batch slots
         # (hot vertices skip neighborhood assembly entirely)
         miss_pos, miss_verts = [], []
@@ -216,90 +183,77 @@ class InferenceEngine:
                 miss_pos.append(pos)
                 miss_verts.append(v)
         if req.remaining == 0:
-            self._finish(rid, now if self.opts.replay else time.monotonic())
-            return rid
+            return []
 
         if not self.opts.micro_batch:
             # naive path: one device call per request, no coalescing
             assert len(miss_verts) <= self.spec.slots, "request too large"
-            batches = self._batcher.add(rid, miss_verts, now, miss_pos)
+            batches = self._batcher.add(req.rid, miss_verts, now, miss_pos)
             batches += self._batcher.flush_all()
         else:
-            batches = self._batcher.add(rid, miss_verts, now, miss_pos)
+            batches = self._batcher.add(req.rid, miss_verts, now, miss_pos)
         self.queue_high_water = max(self.queue_high_water,
                                     self._batcher.pending)
-        for b in batches:
-            self._run_batch(b, now)
-        return rid
+        return self._stage(batches)
 
-    def pump(self, now: Optional[float] = None) -> None:
-        """Run any micro-batches whose deadline has expired."""
-        now = self._now(now)
-        for b in self._batcher.flush_due(now):
-            self._run_batch(b, now)
+    def plan(self, now: float, force: bool) -> List[Any]:
+        if force:
+            groups = self._stage(self._batcher.flush_all())
+            # a partially filled dp group must not wait for more batches
+            if self._staged:
+                groups.append(self._take_staged())
+            return groups
+        groups = self._stage(self._batcher.flush_due(now))
         # a partially filled dp group must not wait forever for more batches
         if (self._staged
                 and now >= self._staged[0][1] + self.opts.max_delay_ms / 1e3):
-            self._flush_staged(now)
+            groups.append(self._take_staged())
+        return groups
 
-    def drain(self, now: Optional[float] = None) -> None:
-        """Flush every queued item regardless of deadlines."""
-        now = self._now(now)
-        for b in self._batcher.flush_all():
-            self._run_batch(b, now)
-        if self._staged:
-            self._flush_staged(now)
+    def cancel(self, rid: int) -> None:
+        self._batcher.cancel(rid)
+        staged = []
+        for b, t in self._staged:
+            items = tuple(it for it in b.items if it.req_id != rid)
+            if items:
+                staged.append((MicroBatch(items), t))
+        self._staged = staged
 
-    def poll(self, rid: int,
-             now: Optional[float] = None) -> Optional[np.ndarray]:
-        """Deadline-pump, then return the (k, C) logits if complete."""
-        self.pump(now)
-        return self._done.pop(rid, None)
+    def busy(self) -> bool:
+        return False        # queued work waits for its deadline by design
 
-    def predict(self, vertices: Sequence[int],
-                now: Optional[float] = None) -> np.ndarray:
-        """Synchronous convenience: submit + drain + poll."""
-        rid = self.submit(vertices, now)
-        self.drain(now)
-        out = self._done.pop(rid)
-        return out
-
-    def take_completed(self) -> Dict[int, np.ndarray]:
-        """Pop every finished request at once: {rid: (k, C) logits}. The
-        threaded driver's bulk alternative to per-rid ``poll``."""
-        done, self._done = self._done, {}
-        return done
+    def update_params(self, params) -> None:
+        self._params = params
+        if self._distributed:
+            self._params_sh = self._dist.shard_params(params)
+        self.invalidate()
 
     def invalidate(self) -> None:
         """Graph/model changed: next lookups miss (cache version bump)."""
         if self._cache is not None:
             self._cache.bump_version()
 
-    def update_params(self, params) -> None:
-        """Swap model weights (same pytree structure; no recompile)."""
-        self._params = params
-        if self._distributed:
-            self._params_sh = self._dist.shard_params(params)
-        self.invalidate()
+    # -- batching internals --------------------------------------------------
 
-    # -- internals -----------------------------------------------------------
-
-    def _run_batch(self, batch: MicroBatch, now: float) -> None:
-        """Execute one micro-batch — immediately with one DP group, staged
-        until ``mesh_dp`` batches are ready (continuous batching over the
-        mesh's data axis) otherwise."""
+    def _stage(self, batches: List[MicroBatch]) -> List[List[MicroBatch]]:
+        """Full micro-batches -> executable dp groups. One DP group runs
+        immediately; otherwise batches stage until ``mesh_dp`` are ready
+        (continuous batching over the mesh's data axis)."""
         if self._dp == 1:
-            self._execute_group([batch], now)
-            return
-        # deadline bookkeeping uses the batch's OLDEST item enqueue time, so
-        # batcher wait + staging wait share ONE max_delay budget (not 2x)
-        self._staged.append((batch, batch.items[0].t_enqueue))
-        if len(self._staged) >= self._dp:
-            self._flush_staged(now)
+            return [[b] for b in batches]
+        groups = []
+        for b in batches:
+            # deadline bookkeeping uses the batch's OLDEST item enqueue
+            # time, so batcher wait + staging wait share ONE max_delay
+            # budget (not 2x)
+            self._staged.append((b, b.items[0].t_enqueue))
+            if len(self._staged) >= self._dp:
+                groups.append(self._take_staged())
+        return groups
 
-    def _flush_staged(self, now: float) -> None:
+    def _take_staged(self) -> List[MicroBatch]:
         group, self._staged = [b for b, _ in self._staged], []
-        self._execute_group(group, now)
+        return group
 
     def _miss_rows(self, batch: MicroBatch):
         """(cache-served rows, still-missing distinct vertices) of a batch.
@@ -341,7 +295,8 @@ class InferenceEngine:
         logits = np.asarray(jax.block_until_ready(logits))
         return logits[:len(plans), :, :n_cls]   # drop padded classes/groups
 
-    def _execute_group(self, group: List[MicroBatch], now: float) -> None:
+    def execute(self, group: List[MicroBatch],
+                now: float) -> List[Completion]:
         staged = []                             # (batch, rows, miss, plan)
         plans = []
         for batch in group:
@@ -373,44 +328,19 @@ class InferenceEngine:
                 if self._cache is not None:
                     self._cache.put_many(miss, fresh)
 
-        t_done = now if self.opts.replay else time.monotonic()
-        for batch, rows, _, _ in staged:
-            for it in batch.items:
-                req = self._requests[it.req_id]
-                req.out[it.pos] = rows[it.vertex]
-                req.remaining -= 1
-                if req.remaining == 0:
-                    self._finish(it.req_id, t_done)
-
-    def _finish(self, rid: int, t_done: float) -> None:
-        req = self._requests.pop(rid)
-        self.latencies.observe(t_done - req.t_submit)
-        self.completed += 1
-        self._t_last = t_done
-        self._done[rid] = req.out
+        return [Completion(it.req_id, it.pos, rows[it.vertex])
+                for batch, rows, _, _ in staged for it in batch.items]
 
     # -- stats ---------------------------------------------------------------
 
     def reset_stats(self) -> None:
-        """Zero the latency/throughput counters (e.g. after jit warmup).
-        Cache contents and pending requests are untouched."""
-        self.completed = 0
         self.device_calls = 0
-        self.latencies = LatencyHistogram()
         self.queue_high_water = 0
         self._slots_filled = 0
         self._slots_total = 0
-        self._t_first = None
-        self._t_last = None
 
     def stats(self) -> dict:
-        lat = self.latencies.snapshot()
-        span = ((self._t_last - self._t_first)
-                if (self._t_first is not None and self._t_last is not None)
-                else 0.0)
         out = {
-            "completed": self.completed,
-            "device_calls": self.device_calls,
             "batches": self._batcher.batches_emitted,
             "pending": self._batcher.pending,
             "staged": len(self._staged),
@@ -421,12 +351,39 @@ class InferenceEngine:
                           if self._slots_total else 0.0),
             "padding_waste": (1.0 - self._slots_filled / self._slots_total
                               if self._slots_total else 0.0),
-            "p50_ms": lat["p50_ms"],
-            "p95_ms": lat["p95_ms"],
-            "p99_ms": lat["p99_ms"],
-            "mean_ms": lat["mean_ms"],
-            "req_per_s": self.completed / span if span > 0 else float("inf"),
         }
         if self._cache is not None:
             out["cache"] = self._cache.stats()
         return out
+
+
+class InferenceEngine(ServingCore):
+    """Serve "classify these vertex IDs" requests against a trained GCN."""
+
+    def __init__(self, params, cfg: M.GCNConfig, A: CSRMatrix,
+                 features: np.ndarray, options: ServeOptions = ServeOptions(),
+                 e_cap: Optional[int] = None):
+        backend = GNNBackend(params, cfg, A, features, options, e_cap)
+        super().__init__(backend, replay=options.replay)
+        self.backend = backend
+        self.cfg = cfg
+        self.opts = options
+        self.spec = backend.spec
+
+    @property
+    def queue_high_water(self) -> int:
+        return self.backend.queue_high_water
+
+    def submit(self, vertices: Sequence[int],
+               now: Optional[float] = None, *,
+               deadline_ms: Optional[float] = None) -> int:
+        """Enqueue one classification request; returns its request id.
+
+        ``now`` is honored only in replay mode (virtual clock); a live
+        engine stamps everything with its own monotonic clock."""
+        return super().submit(vertices, now, deadline_ms=deadline_ms)
+
+
+# keep `time` imported for monkeypatch-friendly test seams (the old module
+# exposed it; external callers may still reference engine.time.monotonic)
+_ = time

@@ -15,3 +15,69 @@ def small_dataset():
 @pytest.fixture(scope="session")
 def rng():
     return np.random.default_rng(0)
+
+
+# ---------------------------------------------------------------------------
+# Serving fixtures shared by test_serve / test_serve_driver / test_serve_llm
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="session")
+def gnn_serving_setup():
+    """Factory: ``(n, seed)`` -> ``(ds, cfg, params, ref)`` — a synthetic
+    graph, a 2-layer GCN, and the dense reference forward the serving
+    engines must reproduce. Cached per size so every test module shares one
+    build."""
+    import jax
+    import jax.numpy as jnp
+    from repro.core import gcn_model as M
+    from repro.graphs import csr_to_dense, make_synthetic_dataset
+
+    cache = {}
+
+    def build(n: int, seed: int):
+        key = (n, seed)
+        if key not in cache:
+            ds = make_synthetic_dataset(n=n, num_classes=4, d_in=8,
+                                        avg_degree=6, seed=seed)
+            cfg = M.GCNConfig(d_in=8, d_hidden=16, num_layers=2,
+                              num_classes=4, dropout=0.0)
+            params = M.init_params(jax.random.PRNGKey(0), cfg)
+            dense = jnp.asarray(csr_to_dense(ds.adj_norm))
+            ref = np.asarray(M.forward(params, dense,
+                                       jnp.asarray(ds.features), cfg,
+                                       train=False))
+            cache[key] = (ds, cfg, params, ref)
+        return cache[key]
+
+    return build
+
+
+@pytest.fixture(scope="session")
+def make_gnn_engine(gnn_serving_setup):
+    """Factory: a warmed-up ``InferenceEngine`` over a ``(n, seed)`` graph
+    with the given ``ServeOptions`` fields (jit compiled, stats zeroed)."""
+    from repro.serve import InferenceEngine, ServeOptions
+
+    def build(n: int, seed: int, **opts):
+        ds, cfg, params, _ = gnn_serving_setup(n, seed)
+        eng = InferenceEngine(params, cfg, ds.adj_norm, ds.features,
+                              ServeOptions(**opts))
+        if not eng.opts.replay:
+            eng.predict([0])               # one-time jit warmup
+            eng.reset_stats()
+        return eng
+
+    return build
+
+
+@pytest.fixture(scope="session")
+def llm_serving_setup():
+    """The tinyllama smoke transformer + params shared by the LLM serving
+    tests (init once per session — the model build dominates test time)."""
+    import jax
+    from repro.configs import tinyllama_1_1b
+    from repro.models import transformer as T
+
+    cfg = tinyllama_1_1b.smoke()
+    params = T.init_params(jax.random.PRNGKey(0), cfg)
+    return cfg, params

@@ -149,17 +149,12 @@ def test_assembler_pallas_backend_matches_jax(tiny_ds):
     assert np.array_equal(np.array(ref), np.array(got))
 
 
-def test_engine_pallas_extraction_matches_reference(served):
+def test_engine_pallas_extraction_matches_reference(engine, gnn_serving_setup):
     """End to end: an engine on the fused Pallas assembly path serves the
     same logits as the reference-forward oracle."""
-    ds, cfg, params = served
-    eng = InferenceEngine(params, cfg, ds.adj_norm, ds.features,
-                          ServeOptions(slots=8, support=120,
-                                       extract_impl="pallas"))
+    eng = engine(slots=8, support=120, extract_impl="pallas")
     out = eng.predict([5, 77, 11])
-    dense = jnp.asarray(csr_to_dense(ds.adj_norm))
-    ref = np.asarray(M.forward(params, dense, jnp.asarray(ds.features),
-                               cfg, train=False))
+    ref = gnn_serving_setup(128, 1)[3]
     np.testing.assert_allclose(out, ref[[5, 77, 11]], atol=1e-5)
 
 
@@ -214,37 +209,34 @@ def test_cache_lru_eviction(rng):
 # ---------------------------------------------------------------------------
 
 @pytest.fixture(scope="module")
-def served():
-    ds = make_synthetic_dataset(n=128, num_classes=4, d_in=8,
-                                avg_degree=6, seed=1)
-    cfg = M.GCNConfig(d_in=8, d_hidden=16, num_layers=2, num_classes=4,
-                      dropout=0.0)
-    params = M.init_params(jax.random.PRNGKey(0), cfg)
+def served(gnn_serving_setup):
+    ds, cfg, params, _ = gnn_serving_setup(128, 1)
     return ds, cfg, params
 
 
-def test_engine_predict_matches_reference_forward(served):
+@pytest.fixture(scope="module")
+def engine(make_gnn_engine):
+    """Engine factory over the module's (n=128, seed=1) serving setup."""
+    def build(**opts):
+        return make_gnn_engine(128, 1, **opts)
+    return build
+
+
+def test_engine_predict_matches_reference_forward(engine, gnn_serving_setup):
     """Full-coverage support -> serving must reproduce the dense reference
     forward on the requested rows exactly."""
-    ds, cfg, params = served
-    eng = InferenceEngine(params, cfg, ds.adj_norm, ds.features,
-                          ServeOptions(slots=8, support=120))
+    eng = engine(slots=8, support=120)
     out = eng.predict([5, 77, 11])
-    dense = jnp.asarray(csr_to_dense(ds.adj_norm))
-    ref = np.asarray(M.forward(params, dense, jnp.asarray(ds.features),
-                               cfg, train=False))
+    ref = gnn_serving_setup(128, 1)[3]
     np.testing.assert_allclose(out, ref[[5, 77, 11]], atol=1e-5)
 
 
-def test_engine_replay_determinism(served):
+def test_engine_replay_determinism(engine):
     """Same request stream under the virtual clock -> identical outputs."""
-    ds, cfg, params = served
 
     def run():
-        eng = InferenceEngine(
-            params, cfg, ds.adj_norm, ds.features,
-            ServeOptions(slots=4, support=28, max_delay_ms=5.0,
-                         use_cache=True, replay=True))
+        eng = engine(slots=4, support=28, max_delay_ms=5.0,
+                     use_cache=True, replay=True)
         outs = []
         r0 = eng.submit([1, 2, 3], now=0.000)
         r1 = eng.submit([2, 9], now=0.001)        # fills batch -> runs
@@ -263,22 +255,18 @@ def test_engine_replay_determinism(served):
     assert sa["batches"] == sb["batches"]
 
 
-def test_engine_deadline_holds_partial_batch(served):
-    ds, cfg, params = served
-    eng = InferenceEngine(params, cfg, ds.adj_norm, ds.features,
-                          ServeOptions(slots=8, support=24, max_delay_ms=5.0,
-                                       replay=True))
+def test_engine_deadline_holds_partial_batch(served, engine):
+    _, cfg, _ = served
+    eng = engine(slots=8, support=24, max_delay_ms=5.0, replay=True)
     rid = eng.submit([3], now=0.0)
     assert eng.poll(rid, now=0.002) is None       # before deadline: queued
     out = eng.poll(rid, now=0.006)                # past deadline: flushed
     assert out is not None and out.shape == (1, cfg.num_classes)
 
 
-def test_engine_cache_serves_hits_and_invalidates(served):
-    ds, cfg, params = served
-    eng = InferenceEngine(params, cfg, ds.adj_norm, ds.features,
-                          ServeOptions(slots=4, support=28, max_delay_ms=0.0,
-                                       use_cache=True, replay=True))
+def test_engine_cache_serves_hits_and_invalidates(engine):
+    eng = engine(slots=4, support=28, max_delay_ms=0.0,
+                 use_cache=True, replay=True)
     first = eng.predict([5, 6], now=0.0)
     calls = eng.device_calls
     again = eng.predict([5, 6], now=1.0)          # both cached
@@ -289,13 +277,108 @@ def test_engine_cache_serves_hits_and_invalidates(served):
     assert eng.device_calls == calls + 1          # recomputed after bump
 
 
-def test_engine_naive_mode_one_call_per_request(served):
-    ds, cfg, params = served
-    eng = InferenceEngine(params, cfg, ds.adj_norm, ds.features,
-                          ServeOptions(slots=8, support=24,
-                                       micro_batch=False, replay=True))
+def test_engine_naive_mode_one_call_per_request(engine):
+    eng = engine(slots=8, support=24, micro_batch=False, replay=True)
     for i, t in enumerate([0.0, 0.1, 0.2]):
         out = eng.poll(eng.submit([i], now=t), now=t)
         assert out is not None                    # served inline, no queueing
     assert eng.device_calls == 3
     assert eng.stats()["completed"] == 3
+
+
+def test_engine_deadline_ms_sheds_expired_requests(engine):
+    """Satellite (ROADMAP 3c): a request still incomplete ``deadline_ms``
+    after submit is failed with Overloaded and counted in shed_deadline —
+    while requests without a deadline (or within it) are served normally."""
+    from repro.serve import Overloaded
+    eng = engine(slots=8, support=24, max_delay_ms=5.0, replay=True)
+    r_shed = eng.submit([3], now=0.0, deadline_ms=2.0)
+    r_keep = eng.submit([4], now=0.0)             # no deadline: must survive
+    # the batcher deadline (5 ms) is AFTER the request deadline (2 ms): the
+    # pump at t=3ms sheds the expired request before any flush serves it
+    assert eng.poll(r_shed, now=0.003) is None
+    failed = eng.take_failed()
+    assert set(failed) == {r_shed}
+    assert isinstance(failed[r_shed], Overloaded)
+    assert eng.stats()["shed_deadline"] == 1
+    out = eng.poll(r_keep, now=0.006)             # batcher deadline flush
+    assert out is not None                        # survivor served
+    assert eng.stats()["completed"] == 1
+
+
+def test_engine_update_params_invalidates_int8_cache(engine, gnn_serving_setup):
+    """Satellite: hot-swapping params mid-stream must never serve a stale
+    int8 cache row — the swap bumps the graph/model version the cache keys
+    on, so every post-swap request recomputes under the new weights."""
+    ds, cfg, params, _ = gnn_serving_setup(128, 1)
+    eng = engine(slots=4, support=124, max_delay_ms=0.0,
+                 use_cache=True, replay=True)
+    before = eng.predict([5, 6], now=0.0)         # fills cache rows 5, 6
+    calls = eng.device_calls
+    cached = eng.predict([5, 6], now=1.0)
+    assert eng.device_calls == calls              # served from cache
+    # int8 rows dequantize to ~0.5% of the fresh logits, not bit-equal
+    np.testing.assert_allclose(cached, before, atol=0.05, rtol=0.05)
+
+    params2 = jax.tree.map(lambda a: a * 1.5, params)
+    eng.update_params(params2)                    # mid-stream hot swap
+    after = eng.predict([5, 6], now=2.0)
+    assert eng.device_calls == calls + 1          # cache row NOT reused
+    assert not np.allclose(after, before), "stale cache row served"
+
+    # the new rows must be the new model's reference forward, not a mix
+    ref2 = np.asarray(M.forward(params2,
+                                jnp.asarray(csr_to_dense(ds.adj_norm)),
+                                jnp.asarray(ds.features), cfg, train=False))
+    np.testing.assert_allclose(after, ref2[[5, 6]], atol=1e-4, rtol=1e-4)
+
+    # swap back: version moved forward again -> still no stale reuse
+    eng.update_params(params)
+    calls = eng.device_calls
+    back = eng.predict([5, 6], now=3.0)
+    assert eng.device_calls == calls + 1
+    np.testing.assert_allclose(back, before, atol=1e-5)
+
+
+def test_gnn_outputs_bit_identical_through_protocol(gnn_serving_setup):
+    """Acceptance: the refactored core/backend seams serve BIT-identical
+    logits to the pre-refactor monolithic engine. The golden pipeline is
+    reconstructed here exactly as the old engine ran it — the same
+    MicroBatcher stream (so batch compositions match), the same Alg.-2
+    range planning, and the engine's OWN jitted forward — and every served
+    row must equal it bitwise (zero tolerance): the refactor moved
+    scheduling, not math."""
+    from repro.serve import assembler as asm
+    ds, cfg, params, _ = gnn_serving_setup(128, 1)
+    eng = InferenceEngine(params, cfg, ds.adj_norm, ds.features,
+                          ServeOptions(slots=4, support=28, max_delay_ms=5.0,
+                                       replay=True))
+    streams = [([5, 77, 11], 0.000), ([2, 9], 0.001), ([5], 0.002),
+               ([90, 3, 41, 8], 0.003)]
+    rids = [eng.submit(vs, now=t) for vs, t in streams]
+    eng.drain(now=0.004)
+    outs = [eng.poll(r, now=0.004) for r in rids]
+    assert all(o is not None for o in outs)
+
+    # golden reconstruction of the pre-refactor data path, batch for batch
+    be = eng.backend
+    mb = MicroBatcher(slots=4, max_delay=5.0 / 1e3)
+    batches = []
+    for rid, (vs, t) in zip(rids, streams):
+        batches += mb.add(rid, vs, t)             # full batches, same order
+    batches += mb.flush_all()                     # the drain remainder
+    expect = {rid: np.zeros((len(vs), cfg.num_classes), np.float32)
+              for rid, (vs, _) in zip(rids, streams)}
+    for batch in batches:
+        distinct = np.unique(np.asarray(batch.vertices, np.int64))
+        plan = asm.plan_batch_ranges(distinct, eng.spec, be._pools,
+                                     be._n_pad_plan)
+        logits = np.asarray(be._fwd(params,
+                                    jnp.asarray(plan.batch_ids.reshape(-1)),
+                                    jnp.asarray(plan.col_scale.reshape(-1))))
+        rows = {int(v): logits[plan.req_pos[i]]
+                for i, v in enumerate(distinct)}
+        for it in batch.items:
+            expect[it.req_id][it.pos] = rows[it.vertex]
+    for rid, out in zip(rids, outs):
+        np.testing.assert_array_equal(out, expect[rid])   # bitwise

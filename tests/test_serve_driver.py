@@ -10,41 +10,28 @@ per-request outputs — the deterministic-replay property under load.
 import threading
 import time
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core import gcn_model as M
-from repro.graphs import csr_to_dense, make_synthetic_dataset
-from repro.serve import (InferenceEngine, Overloaded, ServeOptions,
-                         ServingDriver)
+from repro.serve import Overloaded, ServingDriver
 
 N = 96
 
 
 @pytest.fixture(scope="module")
-def served():
-    ds = make_synthetic_dataset(n=N, num_classes=4, d_in=8,
-                                avg_degree=6, seed=2)
-    cfg = M.GCNConfig(d_in=8, d_hidden=16, num_layers=2, num_classes=4,
-                      dropout=0.0)
-    params = M.init_params(jax.random.PRNGKey(0), cfg)
-    dense = jnp.asarray(csr_to_dense(ds.adj_norm))
-    ref = np.asarray(M.forward(params, dense, jnp.asarray(ds.features),
-                               cfg, train=False))
-    return ds, cfg, params, ref
+def served(gnn_serving_setup):
+    return gnn_serving_setup(N, 2)
 
 
-def _engine(served, **kw):
-    ds, cfg, params, _ = served
-    opts = dict(slots=8, support=N - 8, max_delay_ms=2.0)
-    opts.update(kw)
-    eng = InferenceEngine(params, cfg, ds.adj_norm, ds.features,
-                          ServeOptions(**opts))
-    eng.predict([0])                       # one-time jit warmup
-    eng.reset_stats()
-    return eng
+@pytest.fixture(scope="module")
+def engine(make_gnn_engine):
+    """Warmed-up engine factory over this module's full-coverage setup
+    (construction boilerplate lives in conftest — shared with test_serve)."""
+    def build(**kw):
+        opts = dict(slots=8, support=N - 8, max_delay_ms=2.0)
+        opts.update(kw)
+        return make_gnn_engine(N, 2, **opts)
+    return build
 
 
 def _run_threads(n, fn):
@@ -64,7 +51,7 @@ def _run_threads(n, fn):
     assert not errs, errs
 
 
-def test_submit_from_multiple_threads_routes_and_replays(served):
+def test_submit_from_multiple_threads_routes_and_replays(served, engine):
     """8 submitter threads, two identical runs: every future resolves to its
     OWN vertices' reference rows (no cross-request routing under races) and
     the two runs produce identical outputs."""
@@ -72,7 +59,7 @@ def test_submit_from_multiple_threads_routes_and_replays(served):
 
     def scenario():
         out = {}
-        eng = _engine(served)
+        eng = engine()
         with ServingDriver(eng, starvation_ms=20.0) as drv:
             def worker(tid):
                 rng = np.random.default_rng(tid)
@@ -90,11 +77,11 @@ def test_submit_from_multiple_threads_routes_and_replays(served):
         np.testing.assert_array_equal(logits, b[tid][1])   # replay-identical
 
 
-def test_starvation_flush_beats_per_request_deadline(served):
+def test_starvation_flush_beats_per_request_deadline(served, engine):
     """With a 10 s batcher deadline, a lone request must still complete
     within the driver's starvation bound — the flush that serves it is the
     starvation path, not the deadline path."""
-    eng = _engine(served, max_delay_ms=10_000.0)
+    eng = engine(max_delay_ms=10_000.0)
     t0 = time.monotonic()
     with ServingDriver(eng, starvation_ms=30.0) as drv:
         fut = drv.submit([3, 7])
@@ -105,11 +92,11 @@ def test_starvation_flush_beats_per_request_deadline(served):
     np.testing.assert_allclose(out, served[3][[3, 7]], atol=1e-5)
 
 
-def test_drain_completes_all_pending_under_load(served):
+def test_drain_completes_all_pending_under_load(served, engine):
     """Concurrent submitters racing a drain: after close(), every future is
     done and correct, nothing is left pending anywhere."""
     _, _, _, ref = served
-    eng = _engine(served, max_delay_ms=50.0)
+    eng = engine(max_delay_ms=50.0)
     futs = {}
     with ServingDriver(eng, starvation_ms=500.0) as drv:
         def worker(tid):
@@ -129,11 +116,11 @@ def test_drain_completes_all_pending_under_load(served):
     assert st["completed"] == 36                        # all requests served
 
 
-def test_pump_thread_failure_surfaces_through_futures(served):
+def test_pump_thread_failure_surfaces_through_futures(served, engine):
     """An engine error inside the background pump must not hang submitters:
     every in-flight future fails with the exception, and the thread stays
     alive for later traffic."""
-    eng = _engine(served, max_delay_ms=1.0)
+    eng = engine(max_delay_ms=1.0)
 
     def explode(now=None):
         raise RuntimeError("injected pump failure")
@@ -147,12 +134,12 @@ def test_pump_thread_failure_surfaces_through_futures(served):
         assert drv._thread.is_alive()
 
 
-def test_close_drain_failure_fails_futures_not_hangs(served):
+def test_close_drain_failure_fails_futures_not_hangs(served, engine):
     """Satellite: an engine failure during close()'s final drain must
     resolve every in-flight future with the exception instead of leaving
     waiters to hang until their own timeout — and close() itself must not
     raise (it runs in __exit__/cleanup paths)."""
-    eng = _engine(served, max_delay_ms=10_000.0)
+    eng = engine(max_delay_ms=10_000.0)
     drv = ServingDriver(eng, starvation_ms=10_000.0, auto=False)
     futs = [drv.submit([i, i + 1]) for i in range(3)]  # < slots
     assert not any(f.done() for f in futs)       # parked behind the deadline
@@ -194,23 +181,19 @@ def test_close_drain_failure_fails_futures_not_hangs(served):
     eng.drain()                                  # clear engine state
 
 
-def test_driver_rejects_replay_engines(served):
-    eng = _engine(served)
-    replay_eng = InferenceEngine(
-        served[2], served[1], served[0].adj_norm, served[0].features,
-        ServeOptions(slots=4, support=28, replay=True))
+def test_driver_rejects_replay_engines(engine):
+    replay_eng = engine(slots=4, support=28, replay=True)
     with pytest.raises(AssertionError):
         ServingDriver(replay_eng)
-    eng.drain()
 
 
-def test_stats_high_water_marks_and_latency_quantiles(served):
+def test_stats_high_water_marks_and_latency_quantiles(served, engine):
     """Observability satellite: the structured stats() payload. Parking 5
     one-vertex requests behind a long deadline must register exact
     queue/inflight high-water marks; after the drain the latency histogram
     covers every request with ordered quantiles, and batch occupancy +
     padding waste partition the slot capacity."""
-    eng = _engine(served, max_delay_ms=10_000.0)
+    eng = engine(max_delay_ms=10_000.0)
     drv = ServingDriver(eng, starvation_ms=10_000.0, auto=False)
     futs = [drv.submit([i]) for i in range(5)]          # 5 < slots: parked
     st = drv.stats()
@@ -232,12 +215,12 @@ def test_stats_high_water_marks_and_latency_quantiles(served):
     drv.close()
 
 
-def test_max_inflight_sheds_overloaded_requests(served):
+def test_max_inflight_sheds_overloaded_requests(served, engine):
     """Admission control: beyond ``max_inflight`` parked requests, submit
     raises ``Overloaded`` and counts the shed — while every ADMITTED request
     still completes correctly after the overload clears."""
     _, _, _, ref = served
-    eng = _engine(served, max_delay_ms=10_000.0)
+    eng = engine(max_delay_ms=10_000.0)
     drv = ServingDriver(eng, starvation_ms=10_000.0, auto=False,
                         max_inflight=3)
     futs = [drv.submit([i, i + 1]) for i in range(3)]
@@ -260,11 +243,11 @@ def test_max_inflight_sheds_overloaded_requests(served):
     drv.close()
 
 
-def test_manual_driver_pump_services_deadlines(served):
+def test_manual_driver_pump_services_deadlines(served, engine):
     """auto=False: nothing happens until pump() — then the deadline flush
     runs and the future resolves (the deterministic single-step mode)."""
     _, _, _, ref = served
-    eng = _engine(served, max_delay_ms=1.0)
+    eng = engine(max_delay_ms=1.0)
     drv = ServingDriver(eng, starvation_ms=10_000.0, auto=False)
     fut = drv.submit([9, 4, 33])
     assert not fut.done()
